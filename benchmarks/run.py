@@ -1,0 +1,210 @@
+"""Benchmark harness — one section per paper table/figure + system benches.
+
+Prints ``name,value,unit,derived`` CSV rows.  Sections:
+
+* ``encoding``  — ⟦·⟧ encoding time vs workflow size (§3.2);
+* ``optimise``  — rewriting time + removed comms vs (m, b) — the Appendix-B
+  broadcast-collapse numbers (the paper's only quantitative claim);
+* ``runtime``   — 1000 Genomes end-to-end on the decentralised runtime,
+  optimised vs unoptimised plan (§6 experiment analogue: 10 locations,
+  one chromosome/instance);
+* ``bisim``     — LTS sizes + exact bisimulation check time (Thm. 1);
+* ``kernels``   — Pallas kernels (interpret mode) vs jnp references;
+* ``train``     — SWIRL-planned trainer steps/s (smoke config);
+* ``roofline``  — re-prints the dry-run roofline summary if present.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [section ...]``
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _t(fn, *args, repeat=3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def row(name: str, value, unit: str, derived: str = "") -> None:
+    print(f"{name},{value},{unit},{derived}")
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_encoding() -> None:
+    from repro.core import encode
+    from repro.core.translate import genomes_1000
+
+    for n, m in [(4, 3), (16, 8), (64, 32), (256, 128)]:
+        inst = genomes_1000(n=n, m=m, a=4, b=4, c=4)
+        dt, w = _t(encode, inst)
+        row(
+            f"encoding/genomes_n{n}_m{m}", f"{dt * 1e6:.0f}", "us",
+            f"actions={w.total_actions()}",
+        )
+
+
+def bench_optimise() -> None:
+    from repro.core import encode, optimize
+    from repro.core.translate import genomes_1000
+
+    for m, b in [(2, 2), (8, 2), (32, 2), (32, 8)]:
+        inst = genomes_1000(n=8, m=m, a=2, b=b, c=b)
+        w = encode(inst)
+        dt, (o, stats) = _t(optimize, w)
+        row(
+            f"optimise/m{m}_b{b}", f"{dt * 1e6:.0f}", "us",
+            f"comms {w.comm_count()}->{o.comm_count()} removed={stats.removed}",
+        )
+
+
+def bench_runtime() -> None:
+    from repro.core import encode, optimize
+    from repro.core.compile import compile_bundles
+    from repro.core.translate import genomes_1000
+    from repro.workflow import ThreadedRuntime
+
+    # 10 locations, single instance — the paper's experiment scale.
+    inst = genomes_1000(n=4, m=3, a=2, b=2, c=2)
+    rng = np.random.default_rng(0)
+    init = {("l^d", d): rng.random(65536) for d in inst.g("l^d")}
+
+    def fns():
+        out = {}
+        for s in inst.workflow.steps:
+            outs = inst.out_data(s)
+            if s == "s0":
+                out[s] = lambda i, outs=outs: {o: init[("l^d", o)] for o in outs}
+            else:
+                out[s] = lambda i, outs=outs: {
+                    o: sum(np.sum(np.asarray(v)) for v in i.values()) * np.ones(65536)
+                    for o in outs
+                }
+        return out
+
+    for label, system in [
+        ("unoptimised", encode(inst)),
+        ("optimised", optimize(encode(inst))[0]),
+    ]:
+        def drive():
+            rt = ThreadedRuntime(
+                compile_bundles(system, fns()), initial_payloads=dict(init),
+                timeout_s=60,
+            )
+            rt.run()
+            return rt
+
+        dt, rt = _t(drive, repeat=2)
+        sent = rt.channels.stats()["sent"]
+        row(
+            f"runtime/genomes_{label}", f"{dt * 1e3:.1f}", "ms",
+            f"messages={sent} comms_planned={system.comm_count()}",
+        )
+
+
+def bench_bisim() -> None:
+    from repro.core import encode, optimize, weak_barbed_bisimilar
+    from repro.core.semantics import reachable_states
+    from repro.core.translate import genomes_1000
+
+    inst = genomes_1000(n=2, m=2, a=1, b=1, c=1)
+    w = encode(inst)
+    o, _ = optimize(w)
+    dt, states = _t(lambda: len(reachable_states(w, max_states=100_000)))
+    row("bisim/states_W", states, "states", f"explore={dt * 1e3:.0f}ms")
+    dt, ok = _t(lambda: weak_barbed_bisimilar(w, o, max_states=100_000), repeat=1)
+    row("bisim/check", f"{dt * 1e3:.0f}", "ms", f"bisimilar={ok}")
+
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    key = jax.random.key(0)
+    b, hq, hkv, l, d = 1, 4, 2, 512, 64
+    q = jax.random.normal(key, (b, hq, l, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, l, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, l, d))
+
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out - want)))
+    row("kernels/flash_attn_maxerr", f"{err:.2e}", "abs", f"shape={q.shape}")
+
+    fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    fn(q, k, v).block_until_ready()
+    dt, _ = _t(lambda: fn(q, k, v).block_until_ready())
+    row("kernels/xla_ref_latency", f"{dt * 1e3:.2f}", "ms", "CPU jit reference")
+
+
+def bench_train() -> None:
+    from repro.launch.train import train
+
+    t0 = time.perf_counter()
+    out = train(
+        "llama3.2-3b", smoke=True, steps=5, n_pods=2,
+        global_batch=4, seq_len=32, ckpt_dir=None, log_every=100,
+    )
+    dt = time.perf_counter() - t0
+    losses = [float(h["loss"]) for h in out["history"]]
+    row(
+        "train/swirl_2pod_smoke", f"{dt / 5:.2f}", "s/step",
+        f"loss {losses[0]:.3f}->{losses[-1]:.3f}",
+    )
+
+
+def bench_roofline() -> None:
+    d = Path("experiments/dryrun")
+    if not d.exists():
+        row("roofline/dryrun", "missing", "", "run repro.launch.dryrun --all")
+        return
+    recs = [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skips = [r for r in recs if r.get("status") == "skipped"]
+    row("roofline/cells_ok", len(ok), "cells", f"skipped={len(skips)}")
+    for r in ok:
+        if r["mesh"] != "pod1":
+            continue
+        rl = r["roofline"]
+        row(
+            f"roofline/{r['arch']}/{r['shape']}",
+            f"{rl['bound_s']:.4g}", "s",
+            f"dom={rl['dominant']} mfu_bound={rl['mfu_bound'] * 100:.1f}%",
+        )
+
+
+SECTIONS = {
+    "encoding": bench_encoding,
+    "optimise": bench_optimise,
+    "runtime": bench_runtime,
+    "bisim": bench_bisim,
+    "kernels": bench_kernels,
+    "train": bench_train,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SECTIONS)
+    print("name,value,unit,derived")
+    for name in which:
+        SECTIONS[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Pipeline parallelism as a SWIRL plan.
+
+The pipeline-stage graph (stages × microbatches) is a distributed workflow
+instance; the encoding derives each stage's trace, and the stage-to-stage
+send/recv pairs are exactly what lowers to ``ppermute`` on a stage mesh
+axis.  This example runs the plan on the workflow runtime with jitted stage
+functions (CPU), and prints the 1F1B-like schedule that falls out of SWIRL
+reduction order — no scheduler was written, the dataflow IS the schedule.
+
+Run: ``PYTHONPATH=src python examples/pipeline_parallel.py``
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encode, optimize
+from repro.core.translate import PipelineTranslator
+from repro.workflow import Runtime
+
+N_STAGES, N_MICRO = 4, 3
+D = 64
+
+translator = PipelineTranslator(n_stages=N_STAGES, n_microbatches=N_MICRO)
+inst = translator.instance()
+plan, stats = optimize(encode(inst))
+print(f"pipeline plan: {plan.total_actions()} actions, "
+      f"{plan.comm_count()} comms (removed {stats.removed})")
+print(plan["stage1"].pretty()[:200], "…\n")
+
+# Stage bodies: each stage applies its own jitted MLP block.
+key = jax.random.key(0)
+weights = [
+    jax.random.normal(jax.random.fold_in(key, j), (D, D)) / jnp.sqrt(D)
+    for j in range(N_STAGES)
+]
+
+
+@jax.jit
+def stage_fn(w, x):
+    return jax.nn.relu(x @ w)
+
+
+final_outputs: dict[int, jax.Array] = {}
+
+
+def make_fns():
+    fns = {}
+    for j in range(N_STAGES):
+        for k in range(N_MICRO):
+            def f(inputs, j=j, k=k):
+                if j == 0:
+                    x = jax.random.normal(jax.random.key(100 + k), (8, D))
+                else:
+                    x = inputs[f"act_{j - 1}to{j}_mb{k}"]
+                y = stage_fn(weights[j], x)
+                if j == N_STAGES - 1:
+                    final_outputs[k] = y  # sink stage: deliver the result
+                return {o: y for o in inst.out_data(f"stage{j}_mb{k}")}
+            fns[f"stage{j}_mb{k}"] = f
+    return fns
+
+
+rt = Runtime(plan, make_fns())
+st = rt.run()
+print(f"executed {st.execs} stage-steps, {st.comms} stage transfers")
+print("execution order:", " ".join(s for s, _, _ in st.exec_log))
+
+# Reference: run the microbatches straight through one process.
+import numpy as np
+
+for k in range(N_MICRO):
+    x = jax.random.normal(jax.random.key(100 + k), (8, D))
+    for j in range(N_STAGES):
+        x = stage_fn(weights[j], x)
+    np.testing.assert_allclose(
+        np.asarray(final_outputs[k]), np.asarray(x), atol=1e-6
+    )
+print("pipeline outputs match sequential execution ✓")

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + KV-cache greedy decode.
+
+Serves the xLSTM smoke model (O(1)-state decode — the ``long_500k`` path)
+and a GQA transformer side by side.
+
+Run: ``PYTHONPATH=src python examples/serve_batched.py``
+"""
+
+from repro.launch.serve import serve
+
+for arch in ("xlstm-125m", "llama3.2-3b", "granite-moe-1b-a400m"):
+    out = serve(arch, smoke=True, batch=4, prompt_len=32, gen=16)
+    assert out["tokens"].shape == (4, 16)
+print("OK")

@@ -1,0 +1,42 @@
+"""End-to-end driver: a few hundred training steps through the SWIRL plan.
+
+Trains a reduced llama-family model (CPU-sized; the same driver trains the
+full configs on a real mesh) for 200 steps across 2 emulated pods with int8
+error-feedback gradient compression on the cross-pod sync, checkpointing
+every iteration-boundary, and prints the loss curve.
+
+Run: ``PYTHONPATH=src python examples/train_e2e.py [--steps 200]``
+"""
+
+import argparse
+import tempfile
+
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--pods", type=int, default=2)
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        out = train(
+            "llama3.2-3b",  # smoke variant: same family, CPU-sized
+            smoke=True,
+            steps=args.steps,
+            n_pods=args.pods,
+            global_batch=8,
+            seq_len=64,
+            ckpt_dir=ckpt_dir,
+            log_every=20,
+        )
+    losses = [float(h["loss"]) for h in out["history"]]
+    drop = losses[0] - min(losses[len(losses) // 2 :])
+    print(f"loss: {losses[0]:.4f} → {losses[-1]:.4f} (best-half Δ {drop:.4f})")
+    assert drop > 0.05, "training did not make progress"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

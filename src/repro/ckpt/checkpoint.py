@@ -1,0 +1,210 @@
+"""Mesh-agnostic checkpoints: logical arrays + manifest, reshard on load.
+
+Layout of one step directory::
+
+    <dir>/step_000123/
+        manifest.json       # tree structure, leaf shapes/dtypes, step
+        <leaf-id>.npy       # one file per leaf (written last-to-first,
+                            # manifest committed atomically at the end)
+
+Arrays are stored *logically* (full shape, no mesh info), so a checkpoint
+written on a ``(16,16)`` mesh restores onto ``(2,16,16)`` or a degraded
+elastic mesh: ``load_checkpoint(..., shardings=...)`` device_puts each leaf
+with the target sharding.  ``async_save`` snapshots to host memory
+synchronously (cheap) and writes in a background thread, overlapping I/O
+with the next training step.  A ``step_*`` directory without a manifest is
+an interrupted write and is ignored by ``latest_step`` — crash-safe.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+# numpy cannot serialise ml_dtypes natively — store as same-width ints and
+# record the logical dtype in the manifest.
+_EXOTIC: dict[str, tuple[Any, Any]] = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _encode_arr(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    name = arr.dtype.name
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][1]), name
+    return arr, name
+
+
+def _decode_arr(raw: np.ndarray, name: str) -> np.ndarray:
+    if name in _EXOTIC:
+        return raw.view(_EXOTIC[name][0])
+    return raw
+
+
+def _flatten_with_names(tree: PyTree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save_checkpoint(
+    directory: str | Path,
+    step: int,
+    tree: PyTree,
+    *,
+    keep: int = 3,
+) -> Path:
+    """Synchronous save; returns the step directory."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    return _write(Path(directory), step, host_tree, keep=keep)
+
+
+def _write(root: Path, step: int, host_tree: PyTree, *, keep: int) -> Path:
+    sdir = root / f"step_{step:09d}"
+    tmp = root / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves = _flatten_with_names(host_tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (name, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        raw, dtype_name = _encode_arr(arr)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, raw)
+        manifest["leaves"].append(
+            {
+                "name": name,
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": dtype_name,
+            }
+        )
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if sdir.exists():
+        shutil.rmtree(sdir)
+    tmp.rename(sdir)  # atomic commit
+    _gc(root, keep)
+    return sdir
+
+
+def _gc(root: Path, keep: int) -> None:
+    steps = sorted(
+        (p for p in root.glob("step_*") if (p / "manifest.json").exists()),
+        key=lambda p: p.name,
+    )
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory: str | Path) -> int | None:
+    root = Path(directory)
+    if not root.exists():
+        return None
+    best = None
+    for p in root.glob("step_*"):
+        if not (p / "manifest.json").exists():
+            continue  # interrupted write
+        m = re.match(r"step_(\d+)", p.name)
+        if m:
+            s = int(m.group(1))
+            best = s if best is None else max(best, s)
+    return best
+
+
+def load_checkpoint(
+    directory: str | Path,
+    step: int,
+    like: PyTree,
+    *,
+    shardings: PyTree | None = None,
+) -> PyTree:
+    """Restore into the structure of ``like``; reshard if ``shardings`` given.
+
+    ``shardings`` may be a pytree of ``jax.sharding.Sharding`` matching
+    ``like`` (elastic restart onto a different mesh) or ``None`` (host
+    arrays placed with default device placement).
+    """
+    sdir = Path(directory) / f"step_{step:09d}"
+    manifest = json.loads((sdir / "manifest.json").read_text())
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+
+    names = [n for n, _ in _flatten_with_names(like)]
+    missing = [n for n in names if n not in by_name]
+    if missing:
+        raise KeyError(f"checkpoint is missing leaves: {missing[:5]} ...")
+
+    leaves = []
+    flat_sh = (
+        [s for _, s in _flatten_with_names(shardings)] if shardings else None
+    )
+    for i, name in enumerate(names):
+        entry = by_name[name]
+        arr = _decode_arr(np.load(sdir / entry["file"]), entry["dtype"])
+        if flat_sh is not None:
+            leaves.append(jax.device_put(arr, flat_sh[i]))
+        else:
+            leaves.append(arr)
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class async_save:
+    """Snapshot now, write in the background; ``wait()`` to join.
+
+    Usage::
+
+        saver = async_save(dir, step, {"params": params, "opt": opt_state})
+        ...next train step...
+        saver.wait()
+    """
+
+    def __init__(self, directory: str | Path, step: int, tree: PyTree, *, keep: int = 3):
+        # Device→host copy happens synchronously (consistent snapshot)…
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.result: Path | None = None
+        self._exc: BaseException | None = None
+
+        def work():
+            try:
+                self.result = _write(Path(directory), step, host_tree, keep=keep)
+            except BaseException as e:  # noqa: BLE001
+                self._exc = e
+
+        # …the serialisation/IO overlaps the next step.
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self, timeout: float | None = None) -> Path:
+        self._thread.join(timeout)
+        if self._exc is not None:
+            raise self._exc
+        assert self.result is not None
+        return self.result

@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig (+ smoke variants)."""
+
+from __future__ import annotations
+
+from repro.models import ModelConfig, smoke_variant
+
+from . import (
+    deepseek_moe_16b,
+    gemma2_27b,
+    granite_moe_1b_a400m,
+    internvl2_1b,
+    jamba_v0_1_52b,
+    llama3_2_3b,
+    nemotron_4_15b,
+    qwen1_5_110b,
+    seamless_m4t_medium,
+    xlstm_125m,
+)
+from .shapes import SHAPES, SUBQUADRATIC, Shape, cells, shape_applicable
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        seamless_m4t_medium,
+        gemma2_27b,
+        nemotron_4_15b,
+        llama3_2_3b,
+        qwen1_5_110b,
+        xlstm_125m,
+        internvl2_1b,
+        granite_moe_1b_a400m,
+        deepseek_moe_16b,
+        jamba_v0_1_52b,
+    )
+}
+
+
+def get_config(arch: str, *, smoke: bool = False) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    cfg = ARCHS[arch]
+    return smoke_variant(cfg) if smoke else cfg
+
+
+__all__ = [
+    "ARCHS",
+    "get_config",
+    "SHAPES",
+    "Shape",
+    "cells",
+    "shape_applicable",
+    "SUBQUADRATIC",
+]

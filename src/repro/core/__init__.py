@@ -1,0 +1,122 @@
+"""SWIRL core — the paper's contribution as a composable library.
+
+Layers (paper section in brackets):
+
+* :mod:`~repro.core.graph`     — workflow / distributed-workflow models (§2)
+* :mod:`~repro.core.syntax`    — the SWIRL calculus terms (§3, Def. 8)
+* :mod:`~repro.core.semantics` — reduction semantics + LTS (§3.1, Figs. 2-3)
+* :mod:`~repro.core.encoding`  — ``⟦·⟧ : W_I → W_W`` (§3.2, Defs. 10-12)
+* :mod:`~repro.core.optimizer` — rewriting rules ``⟦·⟧ : W_W → W_O`` (§4, Def. 15)
+* :mod:`~repro.core.bisim`     — weak barbed bisimulation checker (§4, Thm. 1)
+* :mod:`~repro.core.parser`    — ``.swirl`` surface syntax (§5)
+* :mod:`~repro.core.translate` — front-end translators incl. 1000 Genomes (§5-6)
+* :mod:`~repro.core.compile`   — per-location executable bundles (§5)
+"""
+
+from .graph import (
+    DistributedWorkflow,
+    DistributedWorkflowInstance,
+    Workflow,
+    WorkflowInstance,
+    make_workflow,
+)
+from .syntax import (
+    NIL,
+    Exec,
+    LocationConfig,
+    Nil,
+    Par,
+    Recv,
+    Send,
+    Seq,
+    Trace,
+    WorkflowSystem,
+    config,
+    congruent,
+    normalize,
+    par,
+    seq,
+    system,
+)
+from .semantics import (
+    CommTransition,
+    ExecTransition,
+    RunResult,
+    apply_transition,
+    barbs,
+    enabled_transitions,
+    reachable_states,
+    run,
+)
+from .encoding import building_block, encode
+from .optimizer import OptimizationStats, optimize, optimize_spatial
+from .bisim import weak_barbed_bisimilar
+from .parser import dumps, loads, parse_system, parse_trace
+from .translate import (
+    DagTranslator,
+    PipelineTranslator,
+    SWIRLTranslator,
+    TrainPipelineTranslator,
+    genomes_1000,
+)
+from .compile import (
+    Channel,
+    LocationBundle,
+    StepMeta,
+    compile_bundles,
+    emit_all,
+    emit_python_source,
+)
+
+__all__ = [
+    "Workflow",
+    "WorkflowInstance",
+    "DistributedWorkflow",
+    "DistributedWorkflowInstance",
+    "make_workflow",
+    "NIL",
+    "Nil",
+    "Exec",
+    "Send",
+    "Recv",
+    "Seq",
+    "Par",
+    "Trace",
+    "LocationConfig",
+    "WorkflowSystem",
+    "config",
+    "system",
+    "seq",
+    "par",
+    "normalize",
+    "congruent",
+    "run",
+    "RunResult",
+    "barbs",
+    "enabled_transitions",
+    "apply_transition",
+    "reachable_states",
+    "ExecTransition",
+    "CommTransition",
+    "encode",
+    "building_block",
+    "optimize",
+    "optimize_spatial",
+    "OptimizationStats",
+    "weak_barbed_bisimilar",
+    "parse_system",
+    "parse_trace",
+    "dumps",
+    "loads",
+    "SWIRLTranslator",
+    "DagTranslator",
+    "TrainPipelineTranslator",
+    "PipelineTranslator",
+    "genomes_1000",
+    "StepMeta",
+    "Channel",
+    "LocationBundle",
+    "compile_bundles",
+    "emit_python_source",
+    "emit_all",
+]

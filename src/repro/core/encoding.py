@@ -1,0 +1,74 @@
+"""Encoding function ``⟦·⟧ : W_I → W_W`` — Definitions 10-12 of the paper.
+
+Given a distributed workflow instance ``I = (W, L, M, D, I)``, the encoding
+produces the workflow system
+
+    W_Init = Π_{l ∈ L} ⟨l, G(l), Π_{s ∈ Q(l)} B_l(s)⟩
+
+where each *building block* ``B_l(s)`` (Def. 10) is
+
+    (Π recv(I(d_i), l_j, l))         for every input datum and every
+                                      location of its producing step
+    . exec(s, In^D(s) ↦ Out^D(s), M(s))
+    . (Π send(d_i ↣ I(d_i), l, l_j)) for every output datum, every consumer
+                                      step, and every location it maps to
+
+Determinism: all the Π iterations follow a fixed (sorted / mapping) order so
+that encoding the same instance twice yields the identical system — the
+paper-exactness tests rely on this.
+"""
+
+from __future__ import annotations
+
+from .graph import DistributedWorkflowInstance
+from .syntax import (
+    Exec,
+    LocationConfig,
+    Recv,
+    Send,
+    Trace,
+    WorkflowSystem,
+    par,
+    seq,
+)
+
+
+def building_block(inst: DistributedWorkflowInstance, s: str, l: str) -> Trace:
+    """``B_l(s)`` per Def. 10."""
+    if l not in inst.locs_of(s):
+        raise ValueError(f"step {s!r} is not mapped onto location {l!r}")
+
+    # (i) receive every input data element from every location of its producer
+    recvs: list[Trace] = []
+    for d in sorted(inst.in_data(s)):
+        port = inst.port_of(d)
+        producers = sorted(inst.producers_of_data(d))
+        if not producers:
+            # Initial port with no producing step: the data must be part of
+            # G(l) (cf. App. B, handled by the auxiliary step s_0 in the
+            # translate front-end). Nothing to receive.
+            continue
+        for ps in producers:
+            for lj in inst.locs_of(ps):
+                recvs.append(Recv(port, lj, l))
+
+    ex = Exec(s, inst.in_data(s), inst.out_data(s), inst.locs_of(s))
+
+    # (iii) send every output datum to every consumer step's locations
+    sends: list[Trace] = []
+    for d in sorted(inst.out_data(s)):
+        port = inst.port_of(d)
+        for sk in sorted(inst.consumers_of_data(d)):
+            for lj in inst.locs_of(sk):
+                sends.append(Send(d, port, l, lj))
+
+    return seq(par(*recvs), ex, par(*sends))
+
+
+def encode(inst: DistributedWorkflowInstance) -> WorkflowSystem:
+    """``⟦I⟧`` per Def. 11 / Def. 12 (initial state ``W_Init``)."""
+    configs = []
+    for l in sorted(inst.locations):
+        blocks = [building_block(inst, s, l) for s in inst.work_queue(l)]
+        configs.append(LocationConfig(l, inst.g(l), par(*blocks)))
+    return WorkflowSystem(tuple(configs))

@@ -1,0 +1,250 @@
+"""Workflow graph model — Definitions 1-7 of the SWIRL paper.
+
+A workflow is a directed bipartite graph ``W = (S, P, D)`` of *steps* and
+*ports* (Def. 1).  A *workflow instance* adds data elements and their port
+placement (Def. 3).  A *distributed workflow* adds locations and a step ->
+locations mapping (Def. 5); an *instance* of it carries both (Def. 7).
+
+All containers are immutable once constructed (tuples / frozensets) so that
+graphs can be hashed, compared and safely shared between the encoder, the
+optimiser and the runtime scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping, Sequence
+
+
+def _fset(xs: Iterable[str]) -> frozenset[str]:
+    return frozenset(xs)
+
+
+@dataclass(frozen=True)
+class Workflow:
+    """Def. 1 — ``W = (S, P, D)`` with ``D ⊆ (S×P) ∪ (P×S)``."""
+
+    steps: frozenset[str]
+    ports: frozenset[str]
+    deps: frozenset[tuple[str, str]]
+
+    def __post_init__(self) -> None:
+        if self.steps & self.ports:
+            raise ValueError(
+                f"steps and ports must be disjoint: {sorted(self.steps & self.ports)}"
+            )
+        for a, b in self.deps:
+            s2p = a in self.steps and b in self.ports
+            p2s = a in self.ports and b in self.steps
+            if not (s2p or p2s):
+                raise ValueError(f"dependency {(a, b)} is not (S×P) ∪ (P×S)")
+
+    # -- Def. 2 ------------------------------------------------------------
+    def in_ports(self, s: str) -> frozenset[str]:
+        """``In(s) = {p | (p, s) ∈ D}``."""
+        return _fset(p for (p, s2) in self.deps if s2 == s and p in self.ports)
+
+    def out_ports(self, s: str) -> frozenset[str]:
+        """``Out(s) = {p | (s, p) ∈ D}``."""
+        return _fset(p for (s2, p) in self.deps if s2 == s and p in self.ports)
+
+    def in_steps(self, p: str) -> frozenset[str]:
+        """``In(p) = {s | (s, p) ∈ D}`` — the producers of port ``p``."""
+        return _fset(s for (s, p2) in self.deps if p2 == p and s in self.steps)
+
+    def out_steps(self, p: str) -> frozenset[str]:
+        """``Out(p) = {s | (p, s) ∈ D}`` — the consumers of port ``p``."""
+        return _fset(s for (p2, s) in self.deps if p2 == p and s in self.steps)
+
+    # -- helpers ------------------------------------------------------------
+    def initial_ports(self) -> frozenset[str]:
+        """Ports with no producing step (workflow inputs, cf. App. B ``s_0``)."""
+        return _fset(p for p in self.ports if not self.in_steps(p))
+
+    def topological_steps(self) -> tuple[str, ...]:
+        """Steps in a deterministic topological order (raises on cycles)."""
+        indeg = {s: 0 for s in self.steps}
+        for s in self.steps:
+            for p in self.in_ports(s):
+                indeg[s] += len(self.in_steps(p))
+        order: list[str] = []
+        ready = sorted(s for s, d in indeg.items() if d == 0)
+        seen: set[str] = set()
+        while ready:
+            s = ready.pop(0)
+            order.append(s)
+            seen.add(s)
+            nxt: set[str] = set()
+            for p in self.out_ports(s):
+                nxt |= self.out_steps(p)
+            for t in sorted(nxt):
+                indeg[t] -= 1
+                if indeg[t] == 0 and t not in seen:
+                    ready.append(t)
+            ready.sort()
+        if len(order) != len(self.steps):
+            raise ValueError("workflow graph contains a cycle")
+        return tuple(order)
+
+
+def make_workflow(
+    steps: Iterable[str],
+    ports: Iterable[str],
+    deps: Iterable[tuple[str, str]],
+) -> Workflow:
+    return Workflow(_fset(steps), _fset(ports), frozenset(tuple(d) for d in deps))
+
+
+@dataclass(frozen=True)
+class WorkflowInstance:
+    """Def. 3 — ``(W, D, I)`` with ``I ⊆ D×P`` mapping data to its port.
+
+    ``placement`` maps each data element to the single port containing it
+    (the paper treats ``I`` as a relation; every example places each data
+    element on exactly one port, which is what we enforce).
+    """
+
+    workflow: Workflow
+    data: frozenset[str]
+    placement: Mapping[str, str]  # d -> p
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "placement", dict(self.placement))
+        for d, p in self.placement.items():
+            if d not in self.data:
+                raise ValueError(f"placement references unknown data {d!r}")
+            if p not in self.workflow.ports:
+                raise ValueError(f"placement references unknown port {p!r}")
+        missing = self.data - set(self.placement)
+        if missing:
+            raise ValueError(f"data without a port: {sorted(missing)}")
+
+    def port_of(self, d: str) -> str:
+        """``I(d)`` — the port holding data element ``d``."""
+        return self.placement[d]
+
+    def data_on(self, p: str) -> frozenset[str]:
+        return _fset(d for d, p2 in self.placement.items() if p2 == p)
+
+    # -- Def. 4 ------------------------------------------------------------
+    def in_data(self, s: str) -> frozenset[str]:
+        """``In^D(s) = {d | (d, p) ∈ I ∧ p ∈ In(s)}``."""
+        ins = self.workflow.in_ports(s)
+        return _fset(d for d, p in self.placement.items() if p in ins)
+
+    def out_data(self, s: str) -> frozenset[str]:
+        """``Out^D(s) = {d | (d, p) ∈ I ∧ p ∈ Out(s)}``."""
+        outs = self.workflow.out_ports(s)
+        return _fset(d for d, p in self.placement.items() if p in outs)
+
+
+@dataclass(frozen=True)
+class DistributedWorkflow:
+    """Def. 5 — ``(W, L, M)`` with ``M ⊆ S×L``."""
+
+    workflow: Workflow
+    locations: frozenset[str]
+    mapping: Mapping[str, tuple[str, ...]]  # s -> locations (deterministic order)
+
+    def __post_init__(self) -> None:
+        norm = {s: tuple(ls) for s, ls in dict(self.mapping).items()}
+        object.__setattr__(self, "mapping", norm)
+        for s, ls in norm.items():
+            if s not in self.workflow.steps:
+                raise ValueError(f"mapping references unknown step {s!r}")
+            if not ls:
+                raise ValueError(f"step {s!r} mapped to no location")
+            for l in ls:
+                if l not in self.locations:
+                    raise ValueError(f"mapping references unknown location {l!r}")
+        unmapped = self.workflow.steps - set(norm)
+        if unmapped:
+            raise ValueError(f"steps without a location: {sorted(unmapped)}")
+
+    def locs_of(self, s: str) -> tuple[str, ...]:
+        """``M(s)``."""
+        return self.mapping[s]
+
+    # -- Def. 6 ------------------------------------------------------------
+    def work_queue(self, l: str) -> tuple[str, ...]:
+        """``Q(l) = {s | l ∈ M(s)}`` in deterministic (topological) order."""
+        topo = self.workflow.topological_steps()
+        return tuple(s for s in topo if l in self.mapping[s])
+
+
+@dataclass(frozen=True)
+class DistributedWorkflowInstance:
+    """Def. 7 — ``I = (W, L, M, D, I)``.
+
+    ``initial_data`` optionally records the instance data distribution
+    ``G(l)`` (Sec. 3.2): which data elements are already resident on each
+    location before execution starts (e.g. the driver's inputs).
+    """
+
+    workflow: Workflow
+    locations: frozenset[str]
+    mapping: Mapping[str, tuple[str, ...]]
+    data: frozenset[str]
+    placement: Mapping[str, str]
+    initial_data: Mapping[str, frozenset[str]] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        # Delegate validation to the component models.
+        object.__setattr__(self, "mapping", dict(self.mapping))
+        object.__setattr__(self, "placement", dict(self.placement))
+        object.__setattr__(
+            self,
+            "initial_data",
+            {l: frozenset(ds) for l, ds in dict(self.initial_data).items()},
+        )
+        DistributedWorkflow(self.workflow, self.locations, self.mapping)
+        WorkflowInstance(self.workflow, self.data, self.placement)
+        for l, ds in self.initial_data.items():
+            if l not in self.locations:
+                raise ValueError(f"initial data on unknown location {l!r}")
+            if not ds <= self.data:
+                raise ValueError(f"unknown initial data on {l!r}: {sorted(ds - self.data)}")
+
+    # Convenience projections -------------------------------------------------
+    @property
+    def distributed(self) -> DistributedWorkflow:
+        return DistributedWorkflow(self.workflow, self.locations, self.mapping)
+
+    @property
+    def instance(self) -> WorkflowInstance:
+        return WorkflowInstance(self.workflow, self.data, self.placement)
+
+    def locs_of(self, s: str) -> tuple[str, ...]:
+        return self.mapping[s]
+
+    def work_queue(self, l: str) -> tuple[str, ...]:
+        return self.distributed.work_queue(l)
+
+    def port_of(self, d: str) -> str:
+        return self.placement[d]
+
+    def in_data(self, s: str) -> frozenset[str]:
+        return self.instance.in_data(s)
+
+    def out_data(self, s: str) -> frozenset[str]:
+        return self.instance.out_data(s)
+
+    def producers_of_data(self, d: str) -> frozenset[str]:
+        """``In(I(d))`` — steps producing the port that holds ``d``."""
+        return self.workflow.in_steps(self.placement[d])
+
+    def consumers_of_data(self, d: str) -> frozenset[str]:
+        """``Out(I(d))`` — steps consuming the port that holds ``d``."""
+        return self.workflow.out_steps(self.placement[d])
+
+    def g(self, l: str) -> frozenset[str]:
+        """``G(l)`` — instance data initially resident on ``l``."""
+        return self.initial_data.get(l, frozenset())
+
+    def with_initial_data(
+        self, initial: Mapping[str, Iterable[str]]
+    ) -> "DistributedWorkflowInstance":
+        return dataclasses.replace(
+            self, initial_data={l: frozenset(ds) for l, ds in initial.items()}
+        )

@@ -1,0 +1,232 @@
+"""``.swirl`` surface syntax — tokenizer + recursive-descent parser.
+
+The paper's reference toolchain uses ANTLR-generated Python3 parsers; ANTLR is
+unavailable offline, so the same surface grammar is implemented by hand.  The
+grammar below round-trips exactly the ``pretty()`` form of
+:mod:`repro.core.syntax`::
+
+    system  := config ("|" config)*
+    config  := "<" NAME "," dataset "," trace ">"
+    dataset := "{" [NAME ("," NAME)*] "}"
+    trace   := par
+    par     := seqe ("|" seqe)*
+    seqe    := term ("." term)*
+    term    := "0" | action | "(" trace ")"
+    action  := "exec" "(" NAME "," dataset "->" dataset "," "{" names "}" ")"
+             | "send" "(" NAME "->" NAME "," NAME "," NAME ")"
+             | "recv" "(" NAME "," NAME "," NAME ")"
+
+Identifiers are ``[A-Za-z0-9_^$]+`` (no dots — ``.`` is sequential
+composition).  ``#`` starts a line comment.  Whitespace is insignificant.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from .syntax import (
+    NIL,
+    Exec,
+    LocationConfig,
+    Recv,
+    Send,
+    Trace,
+    WorkflowSystem,
+    par,
+    seq,
+)
+
+_TOKEN_RE = re.compile(
+    r"""
+    (?P<ws>\s+|\#[^\n]*)
+  | (?P<arrow>->)
+  | (?P<punct>[<>(){},.|])
+  | (?P<name>[A-Za-z0-9_^$]+)
+    """,
+    re.VERBOSE,
+)
+
+
+class SwirlSyntaxError(ValueError):
+    """Raised on malformed ``.swirl`` input, with position info."""
+
+
+@dataclass
+class _Tok:
+    kind: str  # 'arrow' | 'punct' | 'name' | 'eof'
+    text: str
+    pos: int
+
+
+def tokenize(src: str) -> list[_Tok]:
+    toks: list[_Tok] = []
+    i = 0
+    while i < len(src):
+        m = _TOKEN_RE.match(src, i)
+        if not m:
+            raise SwirlSyntaxError(f"unexpected character {src[i]!r} at offset {i}")
+        i = m.end()
+        kind = m.lastgroup or ""
+        if kind == "ws":
+            continue
+        toks.append(_Tok(kind, m.group(), m.start()))
+    toks.append(_Tok("eof", "", len(src)))
+    return toks
+
+
+class _Parser:
+    def __init__(self, src: str):
+        self.toks = tokenize(src)
+        self.i = 0
+
+    # -- token helpers -------------------------------------------------------
+    def peek(self) -> _Tok:
+        return self.toks[self.i]
+
+    def next(self) -> _Tok:
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def expect(self, text: str) -> _Tok:
+        t = self.next()
+        if t.text != text:
+            raise SwirlSyntaxError(
+                f"expected {text!r} but found {t.text or 'EOF'!r} at offset {t.pos}"
+            )
+        return t
+
+    def name(self) -> str:
+        t = self.next()
+        if t.kind != "name":
+            raise SwirlSyntaxError(
+                f"expected identifier but found {t.text or 'EOF'!r} at offset {t.pos}"
+            )
+        return t.text
+
+    # -- grammar -------------------------------------------------------------
+    def system(self) -> WorkflowSystem:
+        configs = [self.config()]
+        while self.peek().text == "|":
+            self.next()
+            configs.append(self.config())
+        if self.peek().kind != "eof":
+            t = self.peek()
+            raise SwirlSyntaxError(f"trailing input {t.text!r} at offset {t.pos}")
+        return WorkflowSystem(tuple(configs))
+
+    def config(self) -> LocationConfig:
+        self.expect("<")
+        loc = self.name()
+        self.expect(",")
+        data = self.dataset()
+        self.expect(",")
+        trace = self.par()
+        self.expect(">")
+        return LocationConfig(loc, data, trace)
+
+    def dataset(self) -> frozenset[str]:
+        self.expect("{")
+        items: list[str] = []
+        if self.peek().text != "}":
+            items.append(self.name())
+            while self.peek().text == ",":
+                self.next()
+                items.append(self.name())
+        self.expect("}")
+        return frozenset(items)
+
+    def par(self) -> Trace:
+        branches = [self.seqe()]
+        while self.peek().text == "|":
+            self.next()
+            branches.append(self.seqe())
+        return par(*branches)
+
+    def seqe(self) -> Trace:
+        items = [self.term()]
+        while self.peek().text == ".":
+            self.next()
+            items.append(self.term())
+        return seq(*items)
+
+    def term(self) -> Trace:
+        t = self.peek()
+        if t.text == "(":
+            self.next()
+            inner = self.par()
+            self.expect(")")
+            return inner
+        if t.text == "0":
+            self.next()
+            return NIL
+        if t.text in ("exec", "send", "recv"):
+            return self.action()
+        raise SwirlSyntaxError(
+            f"expected a trace term but found {t.text or 'EOF'!r} at offset {t.pos}"
+        )
+
+    def action(self) -> Trace:
+        kw = self.name()
+        self.expect("(")
+        if kw == "exec":
+            step = self.name()
+            self.expect(",")
+            ins = self.dataset()
+            self.expect("->")
+            outs = self.dataset()
+            self.expect(",")
+            self.expect("{")
+            locs: list[str] = []
+            if self.peek().text != "}":
+                locs.append(self.name())
+                while self.peek().text == ",":
+                    self.next()
+                    locs.append(self.name())
+            self.expect("}")
+            self.expect(")")
+            return Exec(step, ins, outs, tuple(locs))
+        if kw == "send":
+            d = self.name()
+            self.expect("->")
+            p = self.name()
+            self.expect(",")
+            src = self.name()
+            self.expect(",")
+            dst = self.name()
+            self.expect(")")
+            return Send(d, p, src, dst)
+        if kw == "recv":
+            p = self.name()
+            self.expect(",")
+            src = self.name()
+            self.expect(",")
+            dst = self.name()
+            self.expect(")")
+            return Recv(p, src, dst)
+        raise SwirlSyntaxError(f"unknown action {kw!r}")
+
+
+def parse_system(src: str) -> WorkflowSystem:
+    """Parse a full ``.swirl`` workflow system."""
+    return _Parser(src).system()
+
+
+def parse_trace(src: str) -> Trace:
+    """Parse a bare execution trace (used in tests and the REPL)."""
+    p = _Parser(src)
+    t = p.par()
+    if p.peek().kind != "eof":
+        tok = p.peek()
+        raise SwirlSyntaxError(f"trailing input {tok.text!r} at offset {tok.pos}")
+    return t
+
+
+def dumps(w: WorkflowSystem) -> str:
+    """Emit the canonical ``.swirl`` text (inverse of :func:`parse_system`)."""
+    return " |\n".join(c.pretty() for c in w.configs)
+
+
+def loads(src: str) -> WorkflowSystem:
+    return parse_system(src)

@@ -1,0 +1,5 @@
+"""Data pipeline: sharded synthetic token streams with background prefetch."""
+
+from .pipeline import SyntheticLM, ShardedLoader, make_batch_specs
+
+__all__ = ["SyntheticLM", "ShardedLoader", "make_batch_specs"]

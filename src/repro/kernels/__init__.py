@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots (+ jnp oracles in ref.py)."""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .decode_attention import decode_attention
+from .rmsnorm import rmsnorm
+
+__all__ = ["ops", "ref", "flash_attention", "decode_attention", "rmsnorm"]

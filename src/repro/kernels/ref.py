@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, Hq, Lq, d]
+    k: jax.Array,  # [B, Hkv, Lk, d]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    kv_len: int | None = None,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    g = hq // hkv
+    kq = jnp.repeat(k, g, axis=1)
+    vq = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) / math.sqrt(d)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    t_idx = jnp.arange(lq)[:, None]
+    s_idx = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= t_idx >= s_idx
+    if window > 0:
+        mask &= t_idx - s_idx < window
+    if kv_len is not None:
+        mask &= s_idx < kv_len
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, Hq, d]
+    k: jax.Array,  # [B, Hkv, Lk, d]
+    v: jax.Array,
+    kv_len,
+) -> jax.Array:
+    b, hq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    g = hq // hkv
+    kq = jnp.repeat(k, g, axis=1)
+    vq = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) / math.sqrt(d)
+    mask = jnp.arange(lk)[None, None, :] < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

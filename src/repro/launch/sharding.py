@@ -1,0 +1,224 @@
+"""Sharding policy: param / batch / cache PartitionSpecs per architecture.
+
+Megatron-style TP on the ``model`` axis:
+
+* attention: Q/K/V column-parallel (output dim), O row-parallel (input dim);
+* MLP: gate/up column-parallel, down row-parallel;
+* MoE: expert-parallel — the leading expert axis shards on ``model`` (all
+  assigned expert counts divide 16);
+* Mamba: in_proj/conv column-parallel on d_inner, x_proj/out_proj
+  row-parallel;
+* embeddings / LM head: vocab-parallel (vocab is padded to a multiple of
+  256, so it always divides);
+* sLSTM: replicated (recurrent h→gates coupling makes TP a per-step
+  all-reduce — at d=768 replication is cheaper);
+* batch: sharded over ``("pod", "data")`` when divisible; ``long_500k``
+  (batch=1) shards the KV-cache *sequence* axis over ``data`` instead (SP).
+
+Every rule guards on divisibility, so the same policy serves full configs,
+smoke variants and degraded elastic meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import ModelConfig
+from .mesh import axis_size, data_axes
+
+PyTree = Any
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    return n % axis_size(mesh, axes) == 0 and n >= axis_size(mesh, axes)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _param_rule(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one *unstacked* param leaf (no repeats dim)."""
+    m = "model"
+
+    def col(in_dim_idx: int = 0) -> P:
+        # column-parallel: shard the LAST dim
+        parts = [None] * len(shape)
+        if _div(shape[-1], mesh, m):
+            parts[-1] = m
+        return P(*parts)
+
+    def row() -> P:
+        # row-parallel: shard the FIRST dim
+        parts = [None] * len(shape)
+        if _div(shape[0], mesh, m):
+            parts[0] = m
+        return P(*parts)
+
+    leaf = path.rsplit("/", 1)[-1]
+
+    if "embed" == path or path.endswith("/embed") or path == "embed":
+        return row()  # [Vp, d] vocab-parallel
+    if "lm_head" in path:
+        return col() if leaf == "w" else row()
+    if "/router/" in path or path.endswith("router/w") or path.endswith("router/b"):
+        return P(*([None] * len(shape)))  # tiny, replicate
+    if "/ffn/" in path and len(shape) == 3:
+        # MoE expert stacks [E, d, de] / [E, de, d] — expert-parallel
+        parts = [None] * len(shape)
+        if _div(shape[0], mesh, m):
+            parts[0] = m
+        return P(*parts)
+    if any(k in path for k in ("/g_i/", "/g_f/", "/g_z/", "/g_o/")):
+        return P(*([None] * len(shape)))  # sLSTM cell: replicated
+    if any(k in path for k in ("i_gate", "f_gate")):
+        return P(*([None] * len(shape)))  # [d, H] — H small
+    if "norm" in path:
+        return P(*([None] * len(shape)))  # all norms replicated
+    if leaf in ("b",) and len(shape) == 1:
+        # biases follow their matrix: column-parallel ones shard
+        if any(k in path for k in ("/o/", "down", "out_proj", "x_proj")):
+            return P(None)  # row-parallel output bias is replicated
+        return P(m) if _div(shape[0], mesh, m) else P(None)
+    if any(k in path for k in ("/q/", "/k/", "/v/", "gate/", "up/", "in_proj", "dt_proj", "vision_proj")):
+        return col()
+    if any(k in path for k in ("/o/", "down/", "out_proj", "x_proj")):
+        return row()
+    if "conv_w" in path:  # [dc, di]
+        return col()
+    if "conv_b" in path or path.endswith("/D"):
+        return P(m) if _div(shape[0], mesh, m) else P(None)
+    if "A_log" in path:  # [di, ds]
+        return row()
+    # norms, scalars, anything else: replicate
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, params_shape: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec pytree matching ``jax.eval_shape(model.init, ...)``."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    specs = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = "/body/" in f"/{p}/"
+        if stacked and len(shape) >= 1:
+            inner = _param_rule(p, shape[1:], mesh)
+            specs.append(P(None, *inner))
+        else:
+            specs.append(_param_rule(p, shape, mesh))
+    treedef = jax.tree.structure(params_shape)
+    return jax.tree.unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ModelConfig, batch_shape: PyTree, mesh: Mesh) -> PyTree:
+    """Token/label/frontend inputs: batch over ("pod","data")."""
+    dp = data_axes(mesh)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        parts = [None] * len(shape)
+        if shape and _div(shape[0], mesh, dp):
+            parts[0] = dp if len(dp) > 1 else dp[0]
+        return P(*parts)
+
+    flat = jax.tree_util.tree_flatten_with_path(batch_shape)[0]
+    specs = [rule(p, l) for p, l in flat]
+    return jax.tree.unflatten(jax.tree.structure(batch_shape), specs)
+
+
+def _cache_rule(
+    path: str, shape: tuple[int, ...], cfg: ModelConfig, mesh: Mesh,
+    *, optimized: bool = True,
+) -> P:
+    dp = data_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    m = "model"
+    leaf = path.rsplit("/", 1)[-1]
+    parts: list = [None] * len(shape)
+    if not shape:
+        return P()
+    batch_shardable = _div(shape[0], mesh, dp)
+
+    if leaf in ("k", "v") and len(shape) == 4:
+        # [B, M, Hkv, hd]
+        if optimized:
+            # H3: shard the cache SEQUENCE over `model`.  Decode attention
+            # then reduces softmax/PV over the sharded axis with tiny
+            # [B, H]-sized collectives instead of all-gathering the cache
+            # (the baseline GSPMD choice: ~0.5 GB/layer on granite decode).
+            if batch_shardable:
+                parts[0] = dp_spec
+                if _div(shape[1], mesh, m):
+                    parts[1] = m
+            elif _div(shape[1], mesh, dp + (m,)):
+                parts[1] = dp + (m,)  # batch=1 long-context: full SP
+            return P(*parts)
+        if batch_shardable:
+            parts[0] = dp_spec
+        elif _div(shape[1], mesh, ("data",)) and "data" in mesh.axis_names:
+            parts[1] = "data"  # SP: batch=1 long-context → shard sequence
+        if _div(shape[2], mesh, m):
+            parts[2] = m
+        elif _div(shape[3], mesh, m):
+            parts[3] = m
+        return P(*parts)
+    if leaf == "conv":  # [B, dc-1, di]
+        if batch_shardable:
+            parts[0] = dp_spec
+        if _div(shape[-1], mesh, m):
+            parts[-1] = m
+        return P(*parts)
+    if leaf == "ssm":  # [B, di, ds]
+        if batch_shardable:
+            parts[0] = dp_spec
+        if _div(shape[1], mesh, m):
+            parts[1] = m
+        return P(*parts)
+    if leaf == "enc_out":  # [B, S, d]
+        if batch_shardable:
+            parts[0] = dp_spec
+        return P(*parts)
+    # recurrent xLSTM states & scalars: shard batch if possible, else replicate
+    if batch_shardable:
+        parts[0] = dp_spec
+    return P(*parts)
+
+
+def cache_specs(
+    cfg: ModelConfig, cache_shape: PyTree, mesh: Mesh, *, optimized: bool = True
+) -> PyTree:
+    flat = jax.tree_util.tree_flatten_with_path(cache_shape)[0]
+    specs = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = "/body/" in f"/{p}/"
+        if stacked and len(shape) >= 1:
+            inner = _cache_rule(p, shape[1:], cfg, mesh, optimized=optimized)
+            specs.append(P(None, *inner))
+        else:
+            specs.append(_cache_rule(p, shape, cfg, mesh, optimized=optimized))
+    return jax.tree.unflatten(jax.tree.structure(cache_shape), specs)
+
+
+def to_shardings(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,121 @@
+"""Step functions (train / prefill / serve) and dry-run input specs."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import Shape
+from repro.models import Model, ModelConfig
+from repro.optim import AdamWConfig
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig):
+    def train_step(params: PyTree, opt_state: adamw.AdamWState, batch: PyTree):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params
+        )
+        return new_params, new_opt, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_grad_step(model: Model):
+    """Forward+backward only — the SWIRL ``fwdbwd`` workflow step."""
+
+    def grad_step(params: PyTree, batch: PyTree):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        return grads, {"loss": loss, **metrics}
+
+    return grad_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params: PyTree, batch: PyTree, cache: PyTree):
+        logits, cache = model.prefill(
+            params,
+            batch["tokens"],
+            cache,
+            src_embeds=batch.get("src_embeds"),
+            patch_embeds=batch.get("patch_embeds"),
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One greedy decode step — the lowered unit for decode_* shapes."""
+
+    def serve_step(params: PyTree, cache: PyTree, token: jax.Array):
+        logits, cache = model.decode_step(params, token, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(
+            jnp.int32
+        )
+        return next_tok, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input stand-ins (ShapeDtypeStruct — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict[str, jax.ShapeDtypeStruct]:
+    """Batch ShapeDtypeStructs for one (arch, shape) cell.
+
+    For the vision frontend the patch stub occupies ``frontend_len`` of the
+    sequence budget (total context = assigned seq_len).  Enc-dec models get
+    ``frontend_len`` encoder frames on top of the decoder's seq_len tokens.
+    """
+    b = shape.global_batch
+    l = shape.seq_len
+    tok_dtype = np.int32
+    d = cfg.d_model
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        tok_l = l - cfg.frontend_len if cfg.frontend == "vision" else l
+        specs["tokens"] = jax.ShapeDtypeStruct((b, tok_l), tok_dtype)
+        specs["labels"] = jax.ShapeDtypeStruct((b, tok_l), tok_dtype)
+    elif shape.kind == "prefill":
+        tok_l = l - cfg.frontend_len if cfg.frontend == "vision" else l
+        specs["tokens"] = jax.ShapeDtypeStruct((b, tok_l), tok_dtype)
+    else:  # decode: one token; the cache holds seq_len rows
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), tok_dtype)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        specs["src_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, d), jnp.dtype(cfg.dtype)
+        )
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, d), jnp.dtype(cfg.dtype)
+        )
+    return specs
+
+
+def abstract_params(model: Model) -> PyTree:
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def abstract_opt_state(params_shape: PyTree) -> PyTree:
+    return jax.eval_shape(adamw.init, params_shape)
+
+
+def abstract_cache(model: Model, batch: int, max_len: int) -> PyTree:
+    return jax.eval_shape(
+        partial(model.init_cache, batch, max_len)
+    )

@@ -1,0 +1,17 @@
+"""Model zoo: configs, layers, mixers (attention/Mamba/xLSTM), MoE, facade."""
+
+from .config import ModelConfig, MoECfg, SSMCfg, smoke_variant, unrolled_variant
+from .model import Model, padded_vocab
+from .layers import set_attn_impl, get_attn_impl
+
+__all__ = [
+    "ModelConfig",
+    "MoECfg",
+    "SSMCfg",
+    "smoke_variant",
+    "unrolled_variant",
+    "Model",
+    "padded_vocab",
+    "set_attn_impl",
+    "get_attn_impl",
+]

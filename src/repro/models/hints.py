@@ -1,0 +1,75 @@
+"""Distribution hints — the beyond-paper collective optimisations.
+
+The baseline lets GSPMD infer every intermediate sharding from the
+parameter/batch specs.  The dry-run profile (EXPERIMENTS.md §Perf) shows
+GSPMD making two catastrophic choices:
+
+1. it partially shards GQA attention heads (Hkv < TP degree) and
+   **all-reduces the score tensor** across the leftover head_dim split —
+   ~10 GB/layer on llama3.2-3b × train_4k;
+2. it materialises the MoE capacity buffer **globally** and all-reduces it
+   across the token shards — ~75 GB/layer on deepseek-moe-16b × train_4k.
+
+When hints are installed (``set_hints``), the model inserts explicit
+constraints/shard_map regions that replace those patterns with
+sequence-sharded attention (K/V all-gather, ~40× less traffic) and
+expert-local MoE dispatch (output psum only, ~50× less traffic).  Hints are
+process-global (like the attention-impl switch) so the same model code
+serves both the paper-faithful baseline and the optimised plan — both are
+recorded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardHints:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]  # batch axes, e.g. ("data",) or ("pod", "data")
+    tp_axis: str = "model"
+    seq_shard_attention: bool = True  # H1 (GQA with Hkv ∤ tp)
+    head_shard_attention: bool = True  # H1b (MHA/GQA with Hkv | tp)
+    local_moe_dispatch: bool = True  # H2
+    seq_parallel_residual: bool = True  # H4 (Megatron-SP residual stream)
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def dp_spec(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+
+_HINTS: ShardHints | None = None
+
+
+def set_hints(hints: ShardHints | None) -> None:
+    global _HINTS
+    _HINTS = hints
+
+
+def get_hints() -> ShardHints | None:
+    return _HINTS
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint under the installed hints (no-op without)."""
+    h = _HINTS
+    if h is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(h.mesh, P(*spec))
+    )

@@ -1,0 +1,109 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping.
+
+Pure-pytree implementation (no optax dependency): ``init`` builds fp32
+moments regardless of param dtype (mixed precision: bf16 params, fp32
+state); ``update`` returns new params cast back to the param dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # int32
+    m: PyTree
+    v: PyTree
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to ``min_lr_ratio × lr``."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps
+    )
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(math.pi * t)
+    )
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def update(
+    cfg: AdamWConfig,
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+) -> tuple[PyTree, AdamWState, dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    # Three passes (XLA CSEs the duplicated arithmetic under jit) — avoids
+    # tuple-leaf ambiguity: param trees legitimately contain tuples (the
+    # scanned "body" groups), so tuple-is-leaf transposition is unsafe.
+    new_params = jax.tree.map(
+        lambda p, g, m, v: upd(p, g, m, v)[0], params, grads, state.m, state.v
+    )
+    new_m = jax.tree.map(
+        lambda p, g, m, v: upd(p, g, m, v)[1], params, grads, state.m, state.v
+    )
+    new_v = jax.tree.map(
+        lambda p, g, m, v: upd(p, g, m, v)[2], params, grads, state.m, state.v
+    )
+    return (
+        new_params,
+        AdamWState(step=step, m=new_m, v=new_v),
+        {"grad_norm": gnorm, "lr": lr},
+    )

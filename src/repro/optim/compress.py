@@ -1,0 +1,74 @@
+"""Int8 gradient compression with error feedback (cross-pod sync).
+
+Cross-pod links are the scarcest bandwidth in a multi-pod job (data-centre
+network vs. intra-pod ICI), so the SWIRL ``gradsync`` step compresses the
+pod-level gradient before its send/recv exchange:
+
+* per-row (last-axis) absmax scaling to int8 — 4× fewer bytes than bf16·2;
+* *error feedback* (Seide et al., 1-bit SGD lineage): the quantisation
+  residual is added back to the next step's gradient, so the compression
+  bias telescopes and SGD-style convergence is preserved.
+
+These are pure functions over pytrees — used by the workflow-level trainer
+(`launch/train.py`) between ``fwdbwd`` and ``update`` steps, and unit-tested
+for the telescoping property.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Compressed(NamedTuple):
+    q: PyTree  # int8 leaves
+    scale: PyTree  # fp32 per-row scales
+
+
+def _quant_leaf(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(g32), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress(grads: PyTree, error: PyTree | None = None) -> tuple[Compressed, PyTree]:
+    """Quantise ``grads + error``; returns (compressed, new error feedback)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error
+    )
+    q = jax.tree.map(lambda c: _quant_leaf(c)[0], corrected)
+    s = jax.tree.map(lambda c: _quant_leaf(c)[1], corrected)
+    deq = jax.tree.map(_dequant_leaf, q, s)
+    new_error = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    return Compressed(q=q, scale=s), new_error
+
+
+def decompress(c: Compressed) -> PyTree:
+    return jax.tree.map(_dequant_leaf, c.q, c.scale)
+
+
+def allreduce_mean(parts: list[PyTree]) -> PyTree:
+    """Host-side mean of decompressed pod gradients (gradsync step body)."""
+    n = float(len(parts))
+    out = parts[0]
+    for p in parts[1:]:
+        out = jax.tree.map(lambda a, b: a + b, out, p)
+    return jax.tree.map(lambda a: a / n, out)
+
+
+def compressed_bytes(c: Compressed) -> int:
+    qb = sum(l.size for l in jax.tree.leaves(c.q))
+    sb = sum(l.size * 4 for l in jax.tree.leaves(c.scale))
+    return qb + sb

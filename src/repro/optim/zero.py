@@ -1,0 +1,44 @@
+"""ZeRO-1: shard optimizer moments over the data axis.
+
+Params are TP-sharded (their PartitionSpec uses the ``model`` axis); AdamW
+moments are element-wise state, so each may *additionally* be sharded over
+``data`` — the classic ZeRO-1 memory split.  ``zero1_specs`` augments each
+param spec: the first dimension that (a) is unsharded and (b) divides the
+data-axis size takes ``"data"``.  XLA then materialises the ZeRO pattern:
+moments update sharded; the param delta is all-gathered over ``data`` during
+the parameter update (exactly ZeRO-1's gather-after-update).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def _augment(spec: P, shape: tuple[int, ...], data_axis: str, data_size: int) -> P:
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % data_size == 0 and dim >= data_size:
+            parts[i] = data_axis
+            return P(*parts)
+    return P(*parts)  # nothing divisible — leave as the param spec
+
+
+def zero1_specs(
+    param_specs: PyTree,
+    param_shapes: PyTree,
+    *,
+    data_axis: str = "data",
+    data_size: int = 1,
+) -> PyTree:
+    """PartitionSpecs for AdamW m/v given the param specs and shapes."""
+    return jax.tree.map(
+        lambda s, sh: _augment(s, tuple(sh.shape) if hasattr(sh, "shape") else tuple(sh), data_axis, data_size),
+        param_specs,
+        param_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,24 @@
+"""Roofline analysis: HLO collective parsing + three-term model."""
+
+from .analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    model_flops,
+    roofline,
+    slstm_extra_flops,
+)
+from .hlo import CollectiveStats, parse_collectives
+
+__all__ = [
+    "Roofline",
+    "roofline",
+    "model_flops",
+    "slstm_extra_flops",
+    "parse_collectives",
+    "CollectiveStats",
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "ICI_BW",
+]

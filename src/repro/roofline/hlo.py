@@ -1,0 +1,145 @@
+"""HLO text analysis: collective-traffic extraction for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not inter-chip traffic,
+so collective bytes are parsed from the partitioned optimized-HLO text.
+Shapes in SPMD modules are *per-device*; per-chip link traffic follows the
+ring-algorithm terms:
+
+    all-gather          out_bytes · (n−1)/n
+    reduce-scatter      out_bytes · (n−1)
+    all-reduce          2 · bytes · (n−1)/n
+    all-to-all          bytes · (n−1)/n
+    collective-permute  bytes
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 1
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclass
+class CollectiveStats:
+    # per-op: count, per-device result bytes, per-device link traffic
+    count: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    result_bytes: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    link_bytes: dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    # attribution: (link_bytes, op, group_size, scaled, op_name) heaviest first
+    top: list[tuple[float, str, int, int, str]] = field(default_factory=list)
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+    def as_dict(self, *, top_n: int = 12) -> dict:
+        return {
+            "count": dict(self.count),
+            "result_bytes": dict(self.result_bytes),
+            "link_bytes": {k: float(v) for k, v in self.link_bytes.items()},
+            "total_link_bytes": float(self.total_link_bytes),
+            "top": [
+                {
+                    "link_bytes": b,
+                    "op": o,
+                    "group": g,
+                    "scale": s,
+                    "op_name": n,
+                }
+                for b, o, g, s, n in sorted(self.top, reverse=True)[:top_n]
+            ],
+        }
+
+
+def _ring_traffic(op: str, nbytes: int, n: int) -> float:
+    if op == "collective-permute":
+        # point-to-point: each device ships its buffer once
+        return float(nbytes)
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return nbytes * (n - 1) / n
+    if op == "reduce-scatter":
+        return nbytes * (n - 1)
+    if op == "all-reduce":
+        return 2.0 * nbytes * (n - 1) / n
+    if op == "all-to-all":
+        return nbytes * (n - 1) / n
+    if op == "collective-permute":
+        return float(nbytes)
+    raise ValueError(op)
+
+
+def parse_collectives(hlo_text: str, *, body_scale: int = 1) -> CollectiveStats:
+    """Parse collective traffic from (partitioned) optimized HLO text.
+
+    ``body_scale``: trip count applied to collectives that execute inside a
+    while-loop body — detected via the instruction's ``op_name`` metadata
+    containing ``/while/`` (XLA preserves the JAX trace path).  The only
+    scans in this codebase with collectives inside are the layer-stack scans
+    (trip count = config ``repeats``); sLSTM's time scan keeps its weights
+    replicated precisely so this scaling stays exact.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        n = _group_size(line)
+        scale = body_scale if "/while/" in line else 1
+        traffic = _ring_traffic(op, nbytes, n) * scale
+        stats.count[op] += scale
+        stats.result_bytes[op] += nbytes * scale
+        stats.link_bytes[op] += traffic
+        nm = _OPNAME_RE.search(line)
+        stats.top.append(
+            (traffic, op, n, scale, nm.group(1) if nm else "")
+        )
+    return stats

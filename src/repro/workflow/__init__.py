@@ -1,0 +1,52 @@
+"""Distributed workflow runtime for SWIRL systems.
+
+* :mod:`~repro.workflow.runtime`  — reduction-driven, checkpointable executor
+  with retry / speculation / heartbeats (execution *is* SWIRL reduction).
+* :mod:`~repro.workflow.threaded` — decentralised per-location threads over
+  channels (the generated-bundle execution model of paper §5).
+* :mod:`~repro.workflow.channels` — in-process channels with fault injection.
+* :mod:`~repro.workflow.fault`    — retry/speculation/heartbeat policies.
+* :mod:`~repro.workflow.elastic`  — location renaming, recovery, rebalance.
+"""
+
+from .channels import Channel, ChannelRegistry
+from .fault import (
+    FlakyFn,
+    HeartbeatMonitor,
+    LocationDead,
+    PermanentError,
+    RetryPolicy,
+    SlowFn,
+    SpeculationPolicy,
+    TransientError,
+)
+from .runtime import Checkpoint, Runtime, RunStats, WorkflowDeadlock
+from .threaded import ThreadedRuntime
+from .elastic import (
+    plan_recovery,
+    rebalance,
+    recover_checkpoint,
+    rename_locations,
+)
+
+__all__ = [
+    "Channel",
+    "ChannelRegistry",
+    "Runtime",
+    "RunStats",
+    "Checkpoint",
+    "WorkflowDeadlock",
+    "ThreadedRuntime",
+    "RetryPolicy",
+    "SpeculationPolicy",
+    "HeartbeatMonitor",
+    "TransientError",
+    "PermanentError",
+    "LocationDead",
+    "FlakyFn",
+    "SlowFn",
+    "rename_locations",
+    "recover_checkpoint",
+    "plan_recovery",
+    "rebalance",
+]

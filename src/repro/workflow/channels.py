@@ -1,0 +1,125 @@
+"""In-process channels for the decentralised threaded runtime.
+
+Each ``(src, dst, port)`` triple gets one FIFO queue — the in-memory analogue
+of the reference implementation's TCP sockets.  ``FaultyChannelRegistry``
+injects transport faults (drops / delays) for the fault-tolerance tests; a
+dropped message is re-sent by the sender after ``ack_timeout`` (at-least-once
+delivery + idempotent receive = exactly-once effect, which is sound because
+SWIRL data elements are immutable and COMM copies rather than consumes).
+"""
+
+from __future__ import annotations
+
+import queue
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Hashable
+
+Endpoint = tuple[str, str, str]  # (src, dst, port)
+
+
+class ChannelClosed(Exception):
+    pass
+
+
+@dataclass
+class Message:
+    data_name: str
+    payload: Any
+    seq: int = 0
+
+
+class Channel:
+    """One directed FIFO with optional injected unreliability."""
+
+    def __init__(
+        self,
+        endpoint: Endpoint,
+        *,
+        drop_prob: float = 0.0,
+        delay_s: float = 0.0,
+        rng: random.Random | None = None,
+    ):
+        self.endpoint = endpoint
+        self._q: queue.Queue[Message] = queue.Queue()
+        self.drop_prob = drop_prob
+        self.delay_s = delay_s
+        self._rng = rng or random.Random(0)
+        self.sent = 0
+        self.dropped = 0
+        self.delivered = 0
+        self._closed = threading.Event()
+
+    def put(self, data_name: str, payload: Any) -> bool:
+        """Send; returns False if the transport 'lost' the message."""
+        self.sent += 1
+        if self._rng.random() < self.drop_prob:
+            self.dropped += 1
+            return False
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        self._q.put(Message(data_name, payload, self.sent))
+        return True
+
+    def put_reliable(self, data_name: str, payload: Any, *, max_tries: int = 20) -> None:
+        """At-least-once: retry until the transport accepts the message."""
+        for _ in range(max_tries):
+            if self.put(data_name, payload):
+                return
+        raise ChannelClosed(
+            f"channel {self.endpoint} dropped the message {max_tries} times"
+        )
+
+    def get(self, timeout: float | None = None) -> Message:
+        try:
+            return self._q.get(timeout=timeout)
+        except queue.Empty:
+            raise TimeoutError(f"recv timed out on {self.endpoint}")
+
+    def close(self) -> None:
+        self._closed.set()
+
+
+class ChannelRegistry:
+    """Lazily creates one channel per endpoint; thread-safe."""
+
+    def __init__(self, **channel_kwargs):
+        self._channels: dict[Endpoint, Channel] = {}
+        self._lock = threading.Lock()
+        self._kwargs = channel_kwargs
+
+    def channel(self, src: str, dst: str, port: str) -> Channel:
+        key = (src, dst, port)
+        with self._lock:
+            if key not in self._channels:
+                self._channels[key] = Channel(key, **self._kwargs)
+            return self._channels[key]
+
+    # dict-style access used by the generated bundles (core.compile).
+    def __getitem__(self, key: Endpoint):
+        return _BundleChannelView(self.channel(*key))
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "channels": len(self._channels),
+                "sent": sum(c.sent for c in self._channels.values()),
+                "dropped": sum(c.dropped for c in self._channels.values()),
+            }
+
+
+class _BundleChannelView:
+    """Adapter exposing the ``put((name, payload))`` / ``get()`` protocol the
+    generated Python bundles expect."""
+
+    def __init__(self, ch: Channel):
+        self._ch = ch
+
+    def put(self, item: tuple[str, Any]) -> None:
+        self._ch.put_reliable(item[0], item[1])
+
+    def get(self) -> tuple[str, Any]:
+        m = self._ch.get(timeout=30.0)
+        return (m.data_name, m.payload)

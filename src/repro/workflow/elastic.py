@@ -1,0 +1,139 @@
+"""Elastic re-mapping and failure recovery.
+
+SWIRL semantics is invariant under *location renaming* (names are opaque in
+Figs. 2-3), so recovering from a dead location is a bijective substitution on
+the last consistent checkpoint:
+
+1. take the checkpointed system (remaining traces per location),
+2. rename every reference to the dead location — configuration name,
+   ``send``/``recv`` endpoints, ``exec`` location sets — to a spare,
+3. move the dead location's checkpointed payloads to the spare,
+4. resume reduction.
+
+Steps already completed before the checkpoint are not re-run; in-flight work
+is re-executed from pure inputs (lineage argument).  The same primitive
+implements *scale-down* (fold several locations onto one — the renaming is
+then surjective rather than bijective, which is still sound because traces
+compose in parallel and L-COMM handles the now-local transfers) and
+*scale-up* via :func:`rebalance` (re-encode the instance with a new mapping).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Mapping
+
+from repro.core.encoding import encode
+from repro.core.graph import DistributedWorkflowInstance
+from repro.core.optimizer import optimize
+from repro.core.parser import dumps
+from repro.core.syntax import (
+    Exec,
+    LocationConfig,
+    Nil,
+    Par,
+    Recv,
+    Send,
+    Seq,
+    Trace,
+    WorkflowSystem,
+    par,
+    seq,
+)
+from .runtime import Checkpoint
+
+
+def _rename_trace(t: Trace, ren: Mapping[str, str]) -> Trace:
+    r = lambda l: ren.get(l, l)  # noqa: E731
+    if isinstance(t, Nil):
+        return t
+    if isinstance(t, Exec):
+        return Exec(t.step, t.inputs, t.outputs, tuple(r(l) for l in t.locations))
+    if isinstance(t, Send):
+        return Send(t.data, t.port, r(t.src), r(t.dst))
+    if isinstance(t, Recv):
+        return Recv(t.port, r(t.src), r(t.dst))
+    if isinstance(t, Seq):
+        return seq(*(_rename_trace(i, ren) for i in t.items))
+    if isinstance(t, Par):
+        return par(*(_rename_trace(b, ren) for b in t.branches))
+    raise TypeError(f"not a trace: {t!r}")
+
+
+def rename_locations(w: WorkflowSystem, ren: Mapping[str, str]) -> WorkflowSystem:
+    """Apply a location substitution to a whole system.
+
+    If two configurations collapse onto the same name (scale-down), their
+    data sets are united and their traces composed in parallel.
+    """
+    merged: dict[str, LocationConfig] = {}
+    for cfg in w.configs:
+        new_name = ren.get(cfg.location, cfg.location)
+        new_trace = _rename_trace(cfg.trace, ren)
+        if new_name in merged:
+            prev = merged[new_name]
+            merged[new_name] = LocationConfig(
+                new_name, prev.data | cfg.data, par(prev.trace, new_trace)
+            )
+        else:
+            merged[new_name] = LocationConfig(new_name, cfg.data, new_trace)
+    return WorkflowSystem(tuple(merged[k] for k in sorted(merged)))
+
+
+def recover_checkpoint(
+    ckpt: Checkpoint, ren: Mapping[str, str]
+) -> Checkpoint:
+    """Produce the post-recovery checkpoint under a location substitution."""
+    system = rename_locations(ckpt.system, ren)
+    payloads = {}
+    for (l, d), v in ckpt.payloads.items():
+        payloads[(ren.get(l, l), d)] = v
+    return Checkpoint(
+        system_text=dumps(system),
+        payloads=payloads,
+        completed_execs=ckpt.completed_execs,
+    )
+
+
+def plan_recovery(
+    live: list[str], dead: list[str], spares: list[str]
+) -> dict[str, str]:
+    """Assign each dead location a replacement: spares first, then fold onto
+    live locations round-robin (scale-down)."""
+    ren: dict[str, str] = {}
+    pool = list(spares)
+    for i, d in enumerate(sorted(dead)):
+        if pool:
+            ren[d] = pool.pop(0)
+        elif live:
+            ren[d] = sorted(live)[i % len(live)]
+        else:
+            raise RuntimeError("no live locations or spares to recover onto")
+    return ren
+
+
+def rebalance(
+    inst: DistributedWorkflowInstance,
+    new_mapping: Mapping[str, tuple[str, ...]],
+    *,
+    optimize_system: bool = True,
+) -> WorkflowSystem:
+    """Scale-out/in: re-encode the *instance* under a new step→location map.
+
+    Used at iteration boundaries (e.g. between training steps) when the
+    resource pool changed: the workflow graph and data are unchanged, only
+    ``M`` is replaced, then ``⟦·⟧`` and the optimiser re-derive the plan.
+    """
+    locations = frozenset(l for ls in new_mapping.values() for l in ls)
+    new_inst = replace(
+        inst,
+        locations=locations,
+        mapping={s: tuple(ls) for s, ls in new_mapping.items()},
+        initial_data={
+            l: ds for l, ds in inst.initial_data.items() if l in locations
+        },
+    )
+    w = encode(new_inst)
+    if optimize_system:
+        w, _ = optimize(w)
+    return w

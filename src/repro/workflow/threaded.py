@@ -1,0 +1,202 @@
+"""Decentralised threaded runtime — one thread per location, no orchestrator.
+
+This back-end executes the *compiled bundles* of :mod:`repro.core.compile`
+the way the paper's generated TCP programs do: every location runs its own
+trace against real channels, with no shared scheduler state.  Spatial
+constraints (one step on many locations) synchronise through per-exec
+barriers, matching the (EXEC) rule's synchronised reduction.
+
+This is the back-end used by the 1000 Genomes evaluation; the checkpointable
+:class:`repro.workflow.runtime.Runtime` is the one used under fault
+injection (its state is a reachable SWIRL term, so snapshots are trivial).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+from repro.core.compile import LocationBundle
+from repro.core.syntax import Exec, Nil, Par, Recv, Send, Seq, Trace
+from .channels import ChannelRegistry
+
+
+@dataclass
+class _ExecBarrier:
+    """Synchronises one exec predicate across its ``M(s)`` locations.
+
+    The first arriving location is the leader: it runs the step function and
+    publishes the outputs; everyone waits on the event, then copies the
+    outputs into their local data scope (Out^D(s) added to every D_i).
+    """
+
+    n: int
+    outputs: dict[str, Any] = field(default_factory=dict)
+    _arrived: int = 0
+    _done: threading.Event = field(default_factory=threading.Event)
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+    _leader_claimed: bool = False
+    error: BaseException | None = None
+
+    def arrive_and_maybe_lead(self) -> bool:
+        with self._lock:
+            lead = not self._leader_claimed
+            self._leader_claimed = True
+            self._arrived += 1
+            return lead
+
+    def publish(self, outputs: Mapping[str, Any]) -> None:
+        self.outputs.update(outputs)
+        self._done.set()
+
+    def fail(self, e: BaseException) -> None:
+        self.error = e
+        self._done.set()
+
+    def wait(self, timeout: float = 60.0) -> dict[str, Any]:
+        if not self._done.wait(timeout):
+            raise TimeoutError("exec barrier timed out")
+        if self.error is not None:
+            raise self.error
+        return self.outputs
+
+
+class ThreadedRuntime:
+    """Run one thread per location; each interprets only its own bundle."""
+
+    def __init__(
+        self,
+        bundles: Mapping[str, LocationBundle],
+        *,
+        initial_payloads: Mapping[tuple[str, str], Any] | None = None,
+        channels: ChannelRegistry | None = None,
+        timeout_s: float = 60.0,
+    ):
+        self.bundles = dict(bundles)
+        self.channels = channels or ChannelRegistry()
+        self.timeout_s = timeout_s
+        self._barriers: dict[Exec, _ExecBarrier] = {}
+        self._barrier_lock = threading.Lock()
+        self.data: dict[str, dict[str, Any]] = {
+            loc: {} for loc in self.bundles
+        }
+        # Per-location condition: writes notify; execs wait on In^D(s) ⊆ D_l
+        # (the (EXEC) rule's premise — after optimisation a datum may arrive
+        # via a *sibling* parallel branch's recv, so exec must block on it).
+        self._cond: dict[str, threading.Condition] = {
+            loc: threading.Condition() for loc in self.bundles
+        }
+        for (l, d), v in (initial_payloads or {}).items():
+            self.data[l][d] = v
+        self.errors: list[tuple[str, BaseException]] = []
+
+    def _put_data(self, loc: str, items: Mapping[str, Any]) -> None:
+        with self._cond[loc]:
+            self.data[loc].update(items)
+            self._cond[loc].notify_all()
+
+    def _wait_data(self, loc: str, names: frozenset[str]) -> dict[str, Any]:
+        with self._cond[loc]:
+            ok = self._cond[loc].wait_for(
+                lambda: all(d in self.data[loc] for d in names),
+                timeout=self.timeout_s,
+            )
+            if not ok:
+                missing = sorted(d for d in names if d not in self.data[loc])
+                raise TimeoutError(f"{loc} never received {missing}")
+            return {d: self.data[loc][d] for d in names}
+
+    # -- barrier registry -----------------------------------------------------
+    def _barrier_for(self, act: Exec) -> _ExecBarrier:
+        with self._barrier_lock:
+            if act not in self._barriers:
+                self._barriers[act] = _ExecBarrier(n=len(act.locations))
+            return self._barriers[act]
+
+    # -- per-location interpreter ----------------------------------------------
+    def _interp(self, loc: str, t: Trace) -> None:
+        if isinstance(t, Nil):
+            return
+        if isinstance(t, Seq):
+            for item in t.items:
+                self._interp(loc, item)
+            return
+        if isinstance(t, Par):
+            errs: list[BaseException] = []
+
+            def branch(b: Trace) -> None:
+                try:
+                    self._interp(loc, b)
+                except BaseException as e:  # noqa: BLE001
+                    errs.append(e)
+
+            threads = [
+                threading.Thread(target=branch, args=(b,), daemon=True)
+                for b in t.branches
+            ]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join(self.timeout_s)
+                if th.is_alive():
+                    raise TimeoutError(f"parallel branch stuck on {loc}")
+            if errs:
+                raise errs[0]
+            return
+        if isinstance(t, Send):
+            # The datum may be produced by a sibling branch — wait for it.
+            payload = self._wait_data(loc, frozenset([t.data]))[t.data]
+            self.channels.channel(t.src, t.dst, t.port).put_reliable(
+                t.data, payload
+            )
+            return
+        if isinstance(t, Recv):
+            msg = self.channels.channel(t.src, t.dst, t.port).get(
+                timeout=self.timeout_s
+            )
+            self._put_data(loc, {msg.data_name: msg.payload})
+            return
+        if isinstance(t, Exec):
+            bundle = self.bundles[loc]
+            meta = bundle.steps[t.step]
+            if len(t.locations) == 1:
+                inputs = self._wait_data(loc, t.inputs)
+                out = meta.fn(inputs)
+                self._put_data(loc, {d: out[d] for d in t.outputs})
+                return
+            barrier = self._barrier_for(t)
+            if barrier.arrive_and_maybe_lead():
+                try:
+                    inputs = self._wait_data(loc, t.inputs)
+                    out = meta.fn(inputs)
+                    barrier.publish({d: out[d] for d in t.outputs})
+                except BaseException as e:  # noqa: BLE001
+                    barrier.fail(e)
+                    raise
+            outputs = barrier.wait(self.timeout_s)
+            self._put_data(loc, dict(outputs))
+            return
+        raise TypeError(f"not a trace: {t!r}")
+
+    def _run_location(self, loc: str) -> None:
+        try:
+            self._interp(loc, self.bundles[loc].trace)
+        except BaseException as e:  # noqa: BLE001
+            self.errors.append((loc, e))
+
+    def run(self) -> dict[str, dict[str, Any]]:
+        threads = [
+            threading.Thread(target=self._run_location, args=(loc,), daemon=True)
+            for loc in sorted(self.bundles)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(self.timeout_s)
+            if th.is_alive():
+                raise TimeoutError("a location thread did not finish")
+        if self.errors:
+            loc, err = self.errors[0]
+            raise RuntimeError(f"location {loc} failed: {err!r}") from err
+        return self.data

@@ -1,0 +1,112 @@
+"""Shared fixtures and hypothesis strategies for the SWIRL test suite.
+
+NOTE: no XLA_FLAGS here — smoke tests must see the real single CPU device;
+only launch/dryrun.py forces the 512-device host platform.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+from hypothesis import strategies as st
+
+from repro.core.graph import DistributedWorkflowInstance, make_workflow
+
+
+# ---------------------------------------------------------------------------
+# Random distributed workflow instances (layered DAGs)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def instances(
+    draw,
+    max_layers: int = 3,
+    max_width: int = 3,
+    max_locations: int = 4,
+    multi_location_steps: bool = True,
+):
+    """A random layered DAG workflow instance (always acyclic, connected
+    enough to be interesting, small enough for LTS exploration)."""
+    n_layers = draw(st.integers(1, max_layers))
+    widths = [draw(st.integers(1, max_width)) for _ in range(n_layers)]
+    n_locs = draw(st.integers(1, max_locations))
+    locations = [f"l{i}" for i in range(n_locs)]
+
+    steps, ports, deps = [], [], []
+    data, placement = [], {}
+    mapping = {}
+    prev_ports: list[str] = []
+    initial: dict[str, set] = {}
+
+    sid = 0
+    for layer, width in enumerate(widths):
+        new_ports = []
+        for w in range(width):
+            s = f"s{sid}"
+            sid += 1
+            steps.append(s)
+            if multi_location_steps and draw(st.booleans()) and n_locs > 1:
+                k = draw(st.integers(1, min(2, n_locs)))
+                locs = draw(
+                    st.lists(
+                        st.sampled_from(locations), min_size=k, max_size=k,
+                        unique=True,
+                    )
+                )
+                mapping[s] = tuple(locs)
+            else:
+                mapping[s] = (draw(st.sampled_from(locations)),)
+            # consume a subset of previous layer's ports
+            if prev_ports:
+                n_in = draw(st.integers(0, min(2, len(prev_ports))))
+                ins = draw(
+                    st.lists(
+                        st.sampled_from(prev_ports),
+                        min_size=n_in, max_size=n_in, unique=True,
+                    )
+                )
+                for p in ins:
+                    deps.append((p, s))
+            # produce one port (except sometimes sinks)
+            if layer < n_layers - 1 or draw(st.booleans()):
+                p = f"p{s}"
+                d = f"d{s}"
+                ports.append(p)
+                data.append(d)
+                placement[d] = p
+                deps.append((s, p))
+                new_ports.append(p)
+        prev_ports = new_ports
+
+    # Drop ports nobody consumes? keep them (legal).  Ensure every consumed
+    # port has a producer (by construction it does).
+    wf = make_workflow(steps, ports, deps)
+    inst = DistributedWorkflowInstance(
+        workflow=wf,
+        locations=frozenset(locations),
+        mapping=mapping,
+        data=frozenset(data),
+        placement=placement,
+        initial_data={l: frozenset(ds) for l, ds in initial.items()},
+    )
+    return inst
+
+
+@pytest.fixture
+def rng():
+    return random.Random(0)
+
+
+def identity_step_fns(inst: DistributedWorkflowInstance):
+    """Step fns producing deterministic string payloads."""
+
+    def mk(step, outs):
+        def fn(inputs):
+            sig = ",".join(f"{k}={inputs[k]}" for k in sorted(inputs))
+            return {d: f"{step}({sig})" for d in outs}
+
+        return fn
+
+    return {s: mk(s, inst.out_data(s)) for s in inst.workflow.steps}

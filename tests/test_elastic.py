@@ -1,0 +1,90 @@
+"""Elasticity: renaming invariance, recovery, rebalance."""
+
+import random
+
+from repro.core import encode, optimize, run
+from repro.core.translate import genomes_1000
+from repro.workflow import (
+    Checkpoint,
+    Runtime,
+    plan_recovery,
+    rebalance,
+    recover_checkpoint,
+    rename_locations,
+)
+
+from conftest import identity_step_fns
+
+
+def _setup(n=3, m=2):
+    inst = genomes_1000(n=n, m=m, a=2, b=2, c=2)
+    w, _ = optimize(encode(inst))
+    fns = identity_step_fns(inst)
+    init = {("l^d", d): f"raw:{d}" for d in inst.g("l^d")}
+    return inst, w, fns, init
+
+
+def test_rename_is_semantics_invariant():
+    inst, w, fns, init = _setup()
+    ren = {"l^MO_1": "spare1", "l^F_2": "spare2"}
+    w2 = rename_locations(w, ren)
+    init2 = {(ren.get(l, l), d): v for (l, d), v in init.items()}
+    r1 = run(w, rng=random.Random(3))
+    r2 = run(w2, rng=random.Random(3))
+    assert not r1.deadlocked and not r2.deadlocked
+    assert len(r1.exec_events) == len(r2.exec_events)
+    rt = Runtime(w2, fns, initial_payloads=init2)
+    rt.run()
+    assert "d^IM" in rt.location_data("spare1")
+
+
+def test_scale_down_merges_locations():
+    inst, w, fns, init = _setup()
+    # fold both MO locations onto one
+    w2 = rename_locations(w, {"l^MO_2": "l^MO_1"})
+    assert "l^MO_2" not in w2.locations()
+    rt = Runtime(w2, fns, initial_payloads=init)
+    stats = rt.run()
+    assert stats.execs == len(inst.workflow.steps)
+
+
+def test_recovery_from_checkpoint(tmp_path):
+    inst, w, fns, init = _setup(n=4, m=3)
+    path = tmp_path / "wf.ckpt"
+    rt = Runtime(w, fns, initial_payloads=init, checkpoint_every=3,
+                 checkpoint_path=path)
+    rt.run()
+    ckpt = Checkpoint.load(path)
+
+    # l^MO_1 "dies"; plan a substitution and resume
+    ren = plan_recovery(
+        live=[l for l in w.locations() if l != "l^MO_1"],
+        dead=["l^MO_1"],
+        spares=["l^spare"],
+    )
+    assert ren == {"l^MO_1": "l^spare"}
+    ckpt2 = recover_checkpoint(ckpt, ren)
+    rt2 = Runtime.restore(ckpt2, fns)
+    rt2.run()
+    assert "d^IM" in rt2.location_data("l^spare")
+
+
+def test_plan_recovery_folds_without_spares():
+    ren = plan_recovery(live=["a", "b"], dead=["x", "y", "z"], spares=["s1"])
+    assert ren["x"] == "s1"
+    assert set(ren.values()) <= {"s1", "a", "b"}
+
+
+def test_rebalance_reencodes():
+    inst, w, fns, init = _setup()
+    # move every MO/F step onto a single fat node
+    new_mapping = {
+        s: (("fat",) if s.startswith(("sMO", "sF")) else inst.locs_of(s))
+        for s in inst.workflow.steps
+    }
+    w2 = rebalance(inst, new_mapping)
+    assert "fat" in w2.locations()
+    rt = Runtime(w2, fns, initial_payloads=init)
+    stats = rt.run()
+    assert stats.execs == len(inst.workflow.steps)
+    assert "d^IM" in rt.location_data("fat")

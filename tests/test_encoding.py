@@ -1,0 +1,122 @@
+"""Encoding ``⟦·⟧`` — Defs. 10-12, checked against the paper's Example 2
+and the Appendix-B 1000 Genomes system."""
+
+from repro.core import encode, building_block
+from repro.core.parser import parse_trace
+from repro.core.syntax import Exec, Par, Recv, Send, congruent, actions
+from repro.core.translate import genomes_1000
+
+from test_graph import fig1_instance
+
+
+class TestExample2:
+    """The paper's Example 2: the Fig. 1 instance encodes exactly to W."""
+
+    def test_driver_trace(self):
+        w = encode(fig1_instance())
+        want = parse_trace(
+            "exec(s1,{}->{d1,d2},{ld})."
+            "(send(d1->p1,ld,l1) | send(d2->p2,ld,l2) | send(d2->p2,ld,l3))"
+        )
+        assert congruent(w["ld"].trace, want)
+
+    def test_l1_trace(self):
+        w = encode(fig1_instance())
+        want = parse_trace("recv(p1,ld,l1).exec(s2,{d1}->{},{l1})")
+        assert congruent(w["l1"].trace, want)
+
+    def test_spatial_constraint_traces(self):
+        w = encode(fig1_instance())
+        for loc in ("l2", "l3"):
+            want = parse_trace(
+                f"recv(p2,ld,{loc}).exec(s3,{{d2}}->{{}},{{l2,l3}})"
+            )
+            assert congruent(w[loc].trace, want)
+
+    def test_initial_data_empty(self):
+        w = encode(fig1_instance())
+        for cfg in w.configs:
+            assert cfg.data == frozenset()
+
+
+class TestBuildingBlock:
+    def test_source_step_has_nil_recv(self):
+        # B_ld(s1) = 0.exec(...).sends — i.e. no receive prefix
+        inst = fig1_instance()
+        b = building_block(inst, "s1", "ld")
+        acts = list(actions(b))
+        assert isinstance(acts[0], Exec)
+        assert all(isinstance(a, Send) for a in acts[1:])
+
+    def test_sink_step_has_nil_send(self):
+        inst = fig1_instance()
+        b = building_block(inst, "s2", "l1")
+        acts = list(actions(b))
+        assert isinstance(acts[0], Recv)
+        assert isinstance(acts[-1], Exec)
+
+    def test_recv_per_producer_location(self):
+        # s3 on l2 receives d2 once (from ld, the only producer location)
+        inst = fig1_instance()
+        b = building_block(inst, "s3", "l2")
+        recvs = [a for a in actions(b) if isinstance(a, Recv)]
+        assert recvs == [Recv("p2", "ld", "l2")]
+
+    def test_send_per_consumer_location(self):
+        # s1 sends d2 to both locations of s3 over the same port p2
+        inst = fig1_instance()
+        b = building_block(inst, "s1", "ld")
+        sends = [a for a in actions(b) if isinstance(a, Send)]
+        assert Send("d2", "p2", "ld", "l2") in sends
+        assert Send("d2", "p2", "ld", "l3") in sends
+
+    def test_unmapped_location_rejected(self):
+        inst = fig1_instance()
+        try:
+            building_block(inst, "s1", "l1")
+            assert False
+        except ValueError:
+            pass
+
+
+class TestGenomes1000:
+    """Appendix B structure: driver fan-out, IM broadcast shape."""
+
+    def test_location_count(self):
+        inst = genomes_1000(n=4, m=3, a=2, b=2, c=2)
+        w = encode(inst)
+        # l^d, l^IM, l^SF + 2 I + 2 MO + 2 F = 9
+        assert len(w.configs) == 9
+
+    def test_driver_sends(self):
+        inst = genomes_1000(n=4, m=3, a=2, b=2, c=2)
+        w = encode(inst)
+        sends = [
+            a for a in actions(w["l^d"].trace) if isinstance(a, Send)
+        ]
+        # n individuals inputs + 1 sifting + m·(MO+F) population files
+        assert len(sends) == 4 + 1 + 3 * 2
+
+    def test_im_broadcast_before_optimisation(self):
+        # e^IM sends d^IM once per consuming STEP (m MO steps + m F steps)
+        inst = genomes_1000(n=4, m=3, a=2, b=2, c=2)
+        w = encode(inst)
+        sends = [
+            a
+            for a in actions(w["l^IM"].trace)
+            if isinstance(a, Send) and a.data == "d^IM"
+        ]
+        assert len(sends) == 3 + 3  # one per consumer step (m=3 MO, m=3 F)
+
+    def test_driver_initial_data(self):
+        inst = genomes_1000(n=4, m=3)
+        w = encode(inst)
+        assert "d0_1" in w["l^d"].data
+        assert "d0_SF" in w["l^d"].data
+
+
+class TestDeterminism:
+    def test_encode_is_deterministic(self):
+        a = encode(genomes_1000())
+        b = encode(genomes_1000())
+        assert a == b

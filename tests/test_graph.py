@@ -1,0 +1,109 @@
+"""Workflow graph model — Defs. 1-7 invariants."""
+
+import pytest
+
+from repro.core.graph import (
+    DistributedWorkflowInstance,
+    Workflow,
+    WorkflowInstance,
+    make_workflow,
+)
+
+
+def fig1_workflow():
+    return make_workflow(
+        ["s1", "s2", "s3"],
+        ["p1", "p2"],
+        [("s1", "p1"), ("s1", "p2"), ("p1", "s2"), ("p2", "s3")],
+    )
+
+
+def fig1_instance():
+    return DistributedWorkflowInstance(
+        workflow=fig1_workflow(),
+        locations=frozenset(["ld", "l1", "l2", "l3"]),
+        mapping={"s1": ("ld",), "s2": ("l1",), "s3": ("l2", "l3")},
+        data=frozenset(["d1", "d2"]),
+        placement={"d1": "p1", "d2": "p2"},
+    )
+
+
+class TestDef1to2:
+    def test_in_out_ports(self):
+        w = fig1_workflow()
+        assert w.in_ports("s1") == frozenset()
+        assert w.out_ports("s1") == {"p1", "p2"}
+        assert w.in_ports("s2") == {"p1"}
+        assert w.in_steps("p1") == {"s1"}
+        assert w.out_steps("p2") == {"s3"}
+
+    def test_steps_ports_disjoint(self):
+        with pytest.raises(ValueError, match="disjoint"):
+            make_workflow(["a"], ["a"], [])
+
+    def test_dep_domain(self):
+        with pytest.raises(ValueError, match="not"):
+            make_workflow(["s"], ["p"], [("s", "s")])
+
+    def test_port_fanout_allowed(self):
+        # "one port can have multiple output edges"
+        w = make_workflow(
+            ["a", "b", "c"], ["p"], [("a", "p"), ("p", "b"), ("p", "c")]
+        )
+        assert w.out_steps("p") == {"b", "c"}
+
+    def test_topological_order(self):
+        w = fig1_workflow()
+        topo = w.topological_steps()
+        assert topo.index("s1") < topo.index("s2")
+        assert topo.index("s1") < topo.index("s3")
+
+    def test_cycle_detected(self):
+        w = make_workflow(
+            ["a", "b"], ["p", "q"],
+            [("a", "p"), ("p", "b"), ("b", "q"), ("q", "a")],
+        )
+        with pytest.raises(ValueError, match="cycle"):
+            w.topological_steps()
+
+
+class TestDef3to4:
+    def test_in_out_data(self):
+        inst = fig1_instance()
+        assert inst.in_data("s2") == {"d1"}
+        assert inst.out_data("s1") == {"d1", "d2"}
+        assert inst.in_data("s1") == frozenset()
+
+    def test_placement_validation(self):
+        w = fig1_workflow()
+        with pytest.raises(ValueError, match="unknown port"):
+            WorkflowInstance(w, frozenset(["d"]), {"d": "nope"})
+        with pytest.raises(ValueError, match="without a port"):
+            WorkflowInstance(w, frozenset(["d"]), {})
+
+
+class TestDef5to7:
+    def test_work_queue(self):
+        inst = fig1_instance()
+        assert inst.work_queue("ld") == ("s1",)
+        assert inst.work_queue("l2") == ("s3",)
+        assert inst.locs_of("s3") == ("l2", "l3")
+
+    def test_unmapped_step_rejected(self):
+        with pytest.raises(ValueError, match="without a location"):
+            DistributedWorkflowInstance(
+                workflow=fig1_workflow(),
+                locations=frozenset(["l"]),
+                mapping={"s1": ("l",)},
+                data=frozenset(),
+                placement={},
+            )
+
+    def test_initial_data_validation(self):
+        with pytest.raises(ValueError, match="unknown location"):
+            fig1_instance().with_initial_data({"nope": ["d1"]})
+
+    def test_producers_consumers_of_data(self):
+        inst = fig1_instance()
+        assert inst.producers_of_data("d2") == {"s1"}
+        assert inst.consumers_of_data("d2") == {"s3"}

@@ -1,0 +1,87 @@
+""".swirl surface syntax: round-trips and error reporting."""
+
+import pytest
+from hypothesis import given, settings
+
+from repro.core import encode, optimize
+from repro.core.parser import SwirlSyntaxError, dumps, loads, parse_trace
+from repro.core.syntax import normalize
+from repro.core.translate import genomes_1000
+
+from conftest import instances
+
+
+def test_roundtrip_fig1():
+    from test_graph import fig1_instance
+
+    w = encode(fig1_instance())
+    assert loads(dumps(w)) == w
+
+
+def test_roundtrip_genomes_optimised():
+    o, _ = optimize(encode(genomes_1000()))
+    assert loads(dumps(o)) == o
+
+
+@settings(max_examples=30, deadline=None)
+@given(inst=instances())
+def test_roundtrip_random(inst):
+    w = encode(inst)
+    assert loads(dumps(w)) == w
+
+
+def test_parse_trace_precedence():
+    # '.' binds tighter than '|'
+    t = parse_trace("recv(p,a,b).exec(s,{}->{},{b}) | send(d->p,b,b)")
+    from repro.core.syntax import Par
+
+    assert isinstance(t, Par)
+    assert len(t.branches) == 2
+
+
+def test_parse_nil():
+    t = parse_trace("0.exec(s,{}->{},{l}).0")
+    from repro.core.syntax import Exec
+
+    assert isinstance(normalize(t), Exec)
+
+
+def test_parens_grouping():
+    a = parse_trace("exec(a,{}->{},{l}).(exec(b,{}->{},{l}) | exec(c,{}->{},{l}))")
+    b = parse_trace("exec(a,{}->{},{l}).exec(b,{}->{},{l}) | exec(c,{}->{},{l})")
+    assert normalize(a) != normalize(b)
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "<l,{},exec(s,{}->{},{l})",  # missing >
+        "<l,{},exec(s,{}{},{l})>",  # missing ->
+        "<l,{},bogus(s)>",
+        "<l,{},exec(s,{}->{},{l})> trailing",
+        "<l,{d d},0>",
+    ],
+)
+def test_syntax_errors(bad):
+    with pytest.raises(SwirlSyntaxError):
+        loads(bad)
+
+
+def test_error_reports_offset():
+    try:
+        loads("<l,{},exec(s,{}->{},{l})> | <l2,{},bogus>")
+    except SwirlSyntaxError as e:
+        assert "offset" in str(e)
+    else:
+        raise AssertionError("expected syntax error")
+
+
+def test_comments_and_whitespace():
+    w = loads(
+        """
+        # a comment
+        <l, {d1, d2},   # resident data
+         exec(s, {d1} -> {}, {l})>
+        """
+    )
+    assert w["l"].data == {"d1", "d2"}

@@ -1,0 +1,133 @@
+"""Recurrent mixers: chunked parallel forms ≡ sequential references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig, SSMCfg
+from repro.models.recurrent import (
+    MLSTMState,
+    init_mamba,
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    mamba_mix,
+    mlstm_mix,
+    slstm_mix,
+)
+
+
+def _cfg(chunk, d=32, heads=2, ds=4):
+    return ModelConfig(
+        name="t", n_layers=2, d_model=d, n_heads=heads, n_kv_heads=heads,
+        head_dim=d // heads, d_ff=0, vocab=64, dtype="float32", remat=False,
+        ssm=SSMCfg(d_state=ds, d_conv=4, expand=2, chunk=chunk),
+    )
+
+
+class TestMamba:
+    @pytest.mark.parametrize("chunk", [1, 3, 8, 64])
+    def test_chunking_invariance(self, chunk):
+        """Any chunk size gives identical outputs (carried state is exact)."""
+        cfg_ref = _cfg(chunk=64)
+        cfg = _cfg(chunk=chunk)
+        p = init_mamba(jax.random.key(0), cfg_ref, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 16, cfg_ref.d_model)) * 0.5
+        y_ref, st_ref = mamba_mix(cfg_ref, p, x)
+        y, st = mamba_mix(cfg, p, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(st.ssm), np.asarray(st_ref.ssm), atol=1e-4
+        )
+
+    def test_streaming_equals_batch(self):
+        """Feeding the sequence in two halves through the carried state
+        equals one full pass (the decode-path invariant)."""
+        cfg = _cfg(chunk=4)
+        p = init_mamba(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model)) * 0.5
+        y_full, _ = mamba_mix(cfg, p, x)
+        y1, st = mamba_mix(cfg, p, x[:, :9])
+        y2, _ = mamba_mix(cfg, p, x[:, 9:], st)
+        y_stream = jnp.concatenate([y1, y2], axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y_stream), np.asarray(y_full), atol=1e-4
+        )
+
+    def test_reference_scan(self):
+        """Chunked scan ≡ naive per-step recurrence."""
+        cfg = _cfg(chunk=16, d=16, heads=2, ds=3)
+        p = init_mamba(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model)) * 0.5
+        y, _ = mamba_mix(cfg, p, x)
+        # naive: run length-1 chunks step by step
+        cfg1 = _cfg(chunk=1, d=16, heads=2, ds=3)
+        st = None
+        outs = []
+        for t in range(8):
+            yt, st = mamba_mix(cfg1, p, x[:, t : t + 1], st)
+            outs.append(yt)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate(outs, 1)), np.asarray(y), atol=1e-4
+        )
+
+
+class TestMLSTM:
+    @pytest.mark.parametrize("chunk", [1, 2, 5, 16])
+    def test_chunking_invariance(self, chunk):
+        cfg_ref = _cfg(chunk=16)
+        cfg = _cfg(chunk=chunk)
+        p = init_mlstm(jax.random.key(0), cfg_ref, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 16, cfg_ref.d_model)) * 0.5
+        y_ref, _ = mlstm_mix(cfg_ref, p, x)
+        y, _ = mlstm_mix(cfg, p, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+
+    def test_streaming_equals_batch(self):
+        cfg = _cfg(chunk=4)
+        p = init_mlstm(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 12, cfg.d_model)) * 0.5
+        y_full, _ = mlstm_mix(cfg, p, x)
+        y1, st = mlstm_mix(cfg, p, x[:, :7])
+        y2, _ = mlstm_mix(cfg, p, x[:, 7:], st)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], 1)),
+            np.asarray(y_full),
+            atol=2e-4,
+        )
+
+    def test_forget_gate_decays_carry(self):
+        """With strongly negative forget logits the memory resets; outputs
+        must stay finite (stabiliser working)."""
+        cfg = _cfg(chunk=4)
+        p = init_mlstm(jax.random.key(0), cfg, jnp.float32)
+        p = dict(p)
+        p["f_gate"] = {"w": p["f_gate"]["w"], "b": jnp.full((cfg.n_heads,), -30.0)}
+        x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model))
+        y, st = mlstm_mix(cfg, p, x)
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert bool(jnp.all(jnp.isfinite(st.c)))
+
+
+class TestSLSTM:
+    def test_streaming_equals_batch(self):
+        cfg = _cfg(chunk=4, d=16)
+        p = init_slstm(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 10, cfg.d_model)) * 0.5
+        y_full, _ = slstm_mix(cfg, p, x)
+        y1, st = slstm_mix(cfg, p, x[:, :6])
+        y2, _ = slstm_mix(cfg, p, x[:, 6:], st)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], 1)),
+            np.asarray(y_full),
+            atol=1e-5,
+        )
+
+    def test_stability_long_run(self):
+        cfg = _cfg(chunk=4, d=16)
+        p = init_slstm(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (1, 200, cfg.d_model)) * 2.0
+        y, st = slstm_mix(cfg, p, x)
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert bool(jnp.all(jnp.isfinite(st.m)))

@@ -1,0 +1,166 @@
+"""Workflow runtime: effects, fault tolerance, checkpoints, equivalence."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import encode, optimize
+from repro.core.compile import compile_bundles
+from repro.core.parser import parse_system
+from repro.core.translate import genomes_1000
+from repro.workflow import (
+    Checkpoint,
+    FlakyFn,
+    PermanentError,
+    RetryPolicy,
+    Runtime,
+    SlowFn,
+    SpeculationPolicy,
+    ThreadedRuntime,
+    TransientError,
+    WorkflowDeadlock,
+)
+
+from conftest import identity_step_fns
+
+
+def _genomes(n=3, m=2):
+    inst = genomes_1000(n=n, m=m, a=2, b=2, c=2)
+    w, _ = optimize(encode(inst))
+    fns = identity_step_fns(inst)
+    init = {("l^d", d): f"raw:{d}" for d in inst.g("l^d")}
+    return inst, w, fns, init
+
+
+def test_runtime_executes_all_steps():
+    inst, w, fns, init = _genomes()
+    rt = Runtime(w, fns, initial_payloads=init)
+    stats = rt.run()
+    assert stats.execs == len(inst.workflow.steps)
+    # the MO location holds its inputs (copies — COMM does not consume)
+    assert "d^IM" in rt.location_data("l^MO_1")
+    assert "d^IM" in rt.location_data("l^IM")
+
+
+def test_runtime_threaded_equivalence():
+    inst, w, fns, init = _genomes()
+    rt = Runtime(w, fns, initial_payloads=init)
+    rt.run()
+    trt = ThreadedRuntime(
+        compile_bundles(w, fns), initial_payloads=init, timeout_s=20
+    )
+    data = trt.run()
+    for loc in w.locations():
+        assert data[loc] == rt.location_data(loc), loc
+
+
+def test_retry_recovers_transient_failures():
+    inst, w, fns, init = _genomes()
+    fns = dict(fns)
+    fns["sIM"] = FlakyFn(fns["sIM"], failures=2)
+    rt = Runtime(w, fns, initial_payloads=init, retry=RetryPolicy(max_retries=3))
+    stats = rt.run()
+    assert stats.retries == 2
+
+
+def test_retry_exhaustion_raises():
+    inst, w, fns, init = _genomes()
+    fns = dict(fns)
+    fns["sIM"] = FlakyFn(fns["sIM"], failures=10)
+    rt = Runtime(w, fns, initial_payloads=init, retry=RetryPolicy(max_retries=2))
+    with pytest.raises(TransientError):
+        rt.run()
+
+
+def test_permanent_error_not_retried():
+    inst, w, fns, init = _genomes()
+    fns = dict(fns)
+    fns["sIM"] = FlakyFn(fns["sIM"], failures=5, exc=PermanentError)
+    rt = Runtime(w, fns, initial_payloads=init, retry=RetryPolicy(max_retries=5))
+    with pytest.raises(PermanentError):
+        rt.run()
+    assert fns["sIM"].calls == 1
+
+
+def test_straggler_speculation():
+    inst, w, fns, init = _genomes()
+    fns = dict(fns)
+    fns["sIM"] = SlowFn(fns["sIM"], delay_s=1.0, slow_calls=1)
+    rt = Runtime(
+        w, fns, initial_payloads=init,
+        expected_s={"sIM": 0.02},
+        speculation=SpeculationPolicy(enabled=True, factor=2.0),
+    )
+    t0 = time.monotonic()
+    stats = rt.run()
+    assert stats.speculations >= 1
+    assert time.monotonic() - t0 < 1.0  # backup copy won
+
+
+def test_deadlock_detected():
+    w = parse_system("<a,{},recv(p,b,a)> | <b,{},recv(q,a,b)>")
+    rt = Runtime(w, {})
+    with pytest.raises(WorkflowDeadlock):
+        rt.run()
+
+
+def test_checkpoint_restore_resumes(tmp_path):
+    inst, w, fns, init = _genomes(n=4, m=3)
+    path = tmp_path / "wf.ckpt"
+    rt = Runtime(
+        w, fns, initial_payloads=init,
+        checkpoint_every=2, checkpoint_path=path,
+    )
+    stats = rt.run()
+    assert stats.checkpoints >= 1
+
+    ckpt = Checkpoint.load(path)
+    rt2 = Runtime.restore(ckpt, fns)
+    stats2 = rt2.run()
+    # resumed run finishes the remaining steps and ends in the same payloads
+    for loc in w.locations():
+        assert rt2.location_data(loc) == rt.location_data(loc)
+    assert stats2.execs <= stats.execs
+
+
+def test_checkpoint_is_consistent_snapshot(tmp_path):
+    """A checkpoint parses back to a reachable system (term = program ctr)."""
+    inst, w, fns, init = _genomes()
+    path = tmp_path / "wf.ckpt"
+    rt = Runtime(w, fns, initial_payloads=init, checkpoint_every=1,
+                 checkpoint_path=path)
+    rt.run()
+    ckpt = Checkpoint.load(path)
+    sys2 = ckpt.system  # must parse
+    assert set(sys2.locations()) == set(w.locations())
+
+
+def test_exec_concurrency():
+    """Independent execs run in parallel on the pool."""
+    inst = genomes_1000(n=4, m=2, a=4, b=2, c=2)
+    w, _ = optimize(encode(inst))
+    fns = identity_step_fns(inst)
+    init = {("l^d", d): f"raw:{d}" for d in inst.g("l^d")}
+    running = []
+    peak = []
+    lock = threading.Lock()
+
+    def slow_wrap(fn):
+        def wrapped(inputs):
+            with lock:
+                running.append(1)
+                peak.append(len(running))
+            time.sleep(0.1)
+            out = fn(inputs)
+            with lock:
+                running.pop()
+            return out
+
+        return wrapped
+
+    for i in (1, 2, 3, 4):
+        fns[f"sI_{i}"] = slow_wrap(fns[f"sI_{i}"])
+    rt = Runtime(w, fns, initial_payloads=init, max_workers=4)
+    rt.run()
+    assert max(peak) >= 2  # individuals ran concurrently

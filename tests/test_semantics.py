@@ -1,0 +1,139 @@
+"""Reduction semantics — Figs. 2-3 rule behaviours."""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+
+from repro.core import encode, run
+from repro.core.parser import parse_system
+from repro.core.semantics import (
+    CommTransition,
+    ExecTransition,
+    apply_transition,
+    barbs,
+    enabled_transitions,
+)
+from repro.core.syntax import congruent, normalize
+
+from conftest import instances
+from test_graph import fig1_instance
+
+
+class TestExecRule:
+    def test_exec_blocked_without_input_data(self):
+        w = parse_system("<l,{},exec(s,{d}->{},{l})>")
+        assert enabled_transitions(w) == []
+
+    def test_exec_enabled_with_data(self):
+        w = parse_system("<l,{d},exec(s,{d}->{e},{l})>")
+        ts = enabled_transitions(w)
+        assert len(ts) == 1 and isinstance(ts[0], ExecTransition)
+        w2 = apply_transition(w, ts[0])
+        assert w2["l"].data == {"d", "e"}
+        assert w2.is_terminated()
+
+    def test_exec_synchronises_all_locations(self):
+        # both locations must be at the exec for it to fire
+        w = parse_system(
+            "<a,{d},exec(s,{d}->{e},{a,b})> | "
+            "<b,{d},recv(p,a,b).exec(s,{d}->{e},{a,b})>"
+        )
+        assert all(not isinstance(t, ExecTransition) for t in enabled_transitions(w))
+
+    def test_exec_adds_outputs_everywhere(self):
+        w = parse_system(
+            "<a,{d},exec(s,{d}->{e},{a,b})> | <b,{d},exec(s,{d}->{e},{a,b})>"
+        )
+        ts = [t for t in enabled_transitions(w) if isinstance(t, ExecTransition)]
+        assert len(ts) == 1
+        w2 = apply_transition(w, ts[0])
+        assert w2["a"].data == {"d", "e"} and w2["b"].data == {"d", "e"}
+
+
+class TestCommRule:
+    def test_comm_copies_not_consumes(self):
+        w = parse_system(
+            "<a,{d},send(d->p,a,b)> | <b,{},recv(p,a,b)>"
+        )
+        ts = enabled_transitions(w)
+        assert len(ts) == 1 and isinstance(ts[0], CommTransition)
+        w2 = apply_transition(w, ts[0])
+        assert w2["a"].data == {"d"}  # still there (copy semantics)
+        assert w2["b"].data == {"d"}
+
+    def test_send_blocked_without_datum(self):
+        w = parse_system("<a,{},send(d->p,a,b)> | <b,{},recv(p,a,b)>")
+        assert enabled_transitions(w) == []
+
+    def test_l_comm_same_location(self):
+        w = parse_system("<a,{d},send(d->p,a,a) | recv(p,a,a)>")
+        ts = enabled_transitions(w)
+        assert len(ts) == 1
+        w2 = apply_transition(w, ts[0])
+        assert w2.is_terminated()
+
+    def test_comm_matches_on_port_src_dst(self):
+        w = parse_system(
+            "<a,{d},send(d->p,a,b)> | <b,{},recv(q,a,b)>"
+        )
+        assert enabled_transitions(w) == []  # port mismatch
+
+
+class TestSequencingAndCongruence:
+    def test_seq_guards(self):
+        w = parse_system("<a,{d,e},exec(s1,{d}->{},{a}).exec(s2,{e}->{},{a})>")
+        ts = enabled_transitions(w)
+        assert len(ts) == 1 and ts[0].step == "s1"
+
+    def test_par_interleaves(self):
+        w = parse_system(
+            "<a,{d,e},exec(s1,{d}->{},{a}) | exec(s2,{e}->{},{a})>"
+        )
+        steps = {t.step for t in enabled_transitions(w)}
+        assert steps == {"s1", "s2"}
+
+    def test_barbs_are_execs(self):
+        w = parse_system(
+            "<a,{d},exec(s,{d}->{},{a}) | send(d->p,a,a) | recv(p,a,a)>"
+        )
+        bs = barbs(w)
+        assert len(bs) == 1 and next(iter(bs))[0] == "exec"
+
+    def test_congruence_identity_and_commut(self):
+        a = parse_trace_sys("<l,{},(0.exec(s,{}->{},{l})) | 0>")
+        b = parse_trace_sys("<l,{},exec(s,{}->{},{l})>")
+        assert a.canonical() == b.canonical()
+
+
+def parse_trace_sys(s):
+    return parse_system(s)
+
+
+class TestEncodedSystemsTerminate:
+    def test_fig1_runs_to_completion(self):
+        w = encode(fig1_instance())
+        r = run(w, rng=random.Random(7))
+        assert not r.deadlocked
+        # s3 is one synchronised exec across l2,l3 → 3 exec events total
+        assert len(r.exec_events) == 3
+
+    @settings(max_examples=25, deadline=None)
+    @given(inst=instances())
+    def test_random_instances_terminate(self, inst):
+        w = encode(inst)
+        r = run(w, rng=random.Random(1), max_steps=50_000)
+        assert not r.deadlocked
+        # every step fires exactly once (synchronised execs count once)
+        assert len(r.exec_events) == len(inst.workflow.steps)
+
+    @settings(max_examples=10, deadline=None)
+    @given(inst=instances())
+    def test_schedules_converge(self, inst):
+        """Church-Rosser consequence: any schedule, same final state."""
+        w = encode(inst)
+        finals = set()
+        for seed in range(3):
+            r = run(w, rng=random.Random(seed))
+            finals.add(r.final.canonical())
+        assert len(finals) == 1
