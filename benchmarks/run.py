@@ -57,13 +57,13 @@ def bench_encoding() -> None:
 
 
 def bench_optimise() -> None:
-    from repro.core import encode, optimize
+    from repro.core import encode, rewrite_system
     from repro.core.translate import genomes_1000
 
     for m, b in [(2, 2), (8, 2), (32, 2), (32, 8)]:
         inst = genomes_1000(n=8, m=m, a=2, b=b, c=b)
         w = encode(inst)
-        dt, (o, stats) = _t(optimize, w)
+        dt, (o, stats) = _t(rewrite_system, w)
         row(
             f"optimise/m{m}_b{b}", f"{dt * 1e6:.0f}", "us",
             f"comms {w.comm_count()}->{o.comm_count()} removed={stats.removed}",
@@ -71,10 +71,8 @@ def bench_optimise() -> None:
 
 
 def bench_runtime() -> None:
-    from repro.core import encode, optimize
-    from repro.core.compile import compile_bundles
+    from repro import swirl
     from repro.core.translate import genomes_1000
-    from repro.workflow import ThreadedRuntime
 
     # 10 locations, single instance — the paper's experiment scale.
     inst = genomes_1000(n=4, m=3, a=2, b=2, c=2)
@@ -94,34 +92,32 @@ def bench_runtime() -> None:
                 }
         return out
 
-    for label, system in [
-        ("unoptimised", encode(inst)),
-        ("optimised", optimize(encode(inst))[0]),
+    raw = swirl.trace(inst)
+    for label, plan in [
+        ("unoptimised", raw),
+        ("optimised", raw.optimize()),
     ]:
-        def drive():
-            rt = ThreadedRuntime(
-                compile_bundles(system, fns()), initial_payloads=dict(init),
-                timeout_s=60,
-            )
-            rt.run()
-            return rt
+        lowered = plan.lower("threaded", timeout_s=60)
 
-        dt, rt = _t(drive, repeat=2)
-        sent = rt.channels.stats()["sent"]
+        def drive(lowered=lowered):
+            return lowered.compile(fns()).run(initial_payloads=dict(init))
+
+        dt, result = _t(drive, repeat=2)
+        sent = result.stats["sent"]
         row(
             f"runtime/genomes_{label}", f"{dt * 1e3:.1f}", "ms",
-            f"messages={sent} comms_planned={system.comm_count()}",
+            f"messages={sent} comms_planned={plan.system.comm_count()}",
         )
 
 
 def bench_bisim() -> None:
-    from repro.core import encode, optimize, weak_barbed_bisimilar
+    from repro.core import encode, rewrite_system, weak_barbed_bisimilar
     from repro.core.semantics import reachable_states
     from repro.core.translate import genomes_1000
 
     inst = genomes_1000(n=2, m=2, a=1, b=1, c=1)
     w = encode(inst)
-    o, _ = optimize(w)
+    o, _ = rewrite_system(w)
     dt, states = _t(lambda: len(reachable_states(w, max_states=100_000)))
     row("bisim/states_W", states, "states", f"explore={dt * 1e3:.0f}ms")
     dt, ok = _t(lambda: weak_barbed_bisimilar(w, o, max_states=100_000), repeat=1)

@@ -10,21 +10,21 @@ import time
 
 import numpy as np
 
-from repro.core import encode, optimize
-from repro.core.compile import compile_bundles, emit_python_source
+from repro import swirl
+from repro.core.compile import build_bundles, emit_python_source
 from repro.core.translate import genomes_1000
-from repro.workflow import Runtime, ThreadedRuntime
 
 # n individuals over a locations; m mutation_overlap / frequency steps over
 # b / c locations — Table 1's shape, with m > b so R2 has work to do.
 inst = genomes_1000(n=4, m=4, a=2, b=2, c=2)
 print(f"locations: {sorted(inst.locations)}")
 
-plan = encode(inst)
-optimised, stats = optimize(plan)
+raw = swirl.trace(inst)
+plan = raw.optimize()
+stats = plan.stats
 print(
-    f"plan: {plan.total_actions()} actions, {plan.comm_count()} comms; "
-    f"optimiser removed {stats.removed} "
+    f"plan: {raw.system.total_actions()} actions, "
+    f"{raw.system.comm_count()} comms; optimiser removed {stats.removed} "
     f"(local {stats.removed_local}, duplicate {stats.removed_duplicate})"
 )
 
@@ -60,26 +60,31 @@ def make_fns():
     return fns
 
 
-for label, system in (("unoptimised", plan), ("optimised", optimised)):
+for label, staged in (("unoptimised", raw), ("optimised", plan)):
     t0 = time.perf_counter()
-    rt = ThreadedRuntime(
-        compile_bundles(system, make_fns()),
-        initial_payloads=dict(init), timeout_s=60,
+    result = (
+        staged.lower("threaded", timeout_s=60)
+        .compile(make_fns())
+        .run(initial_payloads=dict(init))
     )
-    rt.run()
     dt = time.perf_counter() - t0
     print(
         f"{label:12s}: {dt * 1e3:6.1f} ms, "
-        f"{rt.channels.stats()['sent']} messages"
+        f"{result.stats['sent']} messages"
     )
 
-# Cross-check against the reduction-semantics runtime.
-rt2 = Runtime(optimised, make_fns(), initial_payloads=dict(init))
-rt2.run()
-mo = rt2.payload("l^MO_1", "d^MO_1") if ("l^MO_1", "d^MO_1") in rt2.payloads else None
-print("sMO_1 statistic:", rt2.location_data("l^MO_1").get("d^MO_1", "<reduced>"))
+# Cross-check against the reduction-semantics (inprocess) backend.
+result2 = (
+    plan.lower("inprocess")
+    .compile(make_fns())
+    .run(initial_payloads=dict(init))
+)
+print(
+    "sMO_1 statistic:",
+    result2.location_data("l^MO_1").get("d^MO_1", "<reduced>"),
+)
 
 # Peek at one generated self-contained bundle (paper §5's compiler output).
-bundle = compile_bundles(optimised, make_fns())["l^IM"]
+bundle = build_bundles(plan.system, make_fns())["l^IM"]
 print("\n--- generated bundle for l^IM (first 400 chars) ---")
 print(emit_python_source(bundle)[:400])

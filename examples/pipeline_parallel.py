@@ -13,19 +13,18 @@ Run: ``PYTHONPATH=src python examples/pipeline_parallel.py``
 import jax
 import jax.numpy as jnp
 
-from repro.core import encode, optimize
+from repro import swirl
 from repro.core.translate import PipelineTranslator
-from repro.workflow import Runtime
 
 N_STAGES, N_MICRO = 4, 3
 D = 64
 
 translator = PipelineTranslator(n_stages=N_STAGES, n_microbatches=N_MICRO)
-inst = translator.instance()
-plan, stats = optimize(encode(inst))
-print(f"pipeline plan: {plan.total_actions()} actions, "
-      f"{plan.comm_count()} comms (removed {stats.removed})")
-print(plan["stage1"].pretty()[:200], "…\n")
+plan = swirl.trace(translator).optimize()
+inst = plan.instance
+print(f"pipeline plan: {plan.system.total_actions()} actions, "
+      f"{plan.system.comm_count()} comms (removed {plan.stats.removed})")
+print(plan.system["stage1"].pretty()[:200], "…\n")
 
 # Stage bodies: each stage applies its own jitted MLP block.
 key = jax.random.key(0)
@@ -60,8 +59,7 @@ def make_fns():
     return fns
 
 
-rt = Runtime(plan, make_fns())
-st = rt.run()
+st = plan.lower("inprocess").compile(make_fns()).run().stats
 print(f"executed {st.execs} stage-steps, {st.comms} stage transfers")
 print("execution order:", " ".join(s for s, _, _ in st.exec_log))
 

@@ -1,40 +1,39 @@
-"""Quickstart: a 5-step DAG → SWIRL plan → optimised → executed.
+"""Quickstart: a 5-step DAG through the staged-compilation pipeline.
+
+``swirl.trace`` encodes the DAG into a SWIRL plan, ``.optimize()`` applies
+the paper's rewriting rules (with a machine-checked bisimulation
+certificate), ``.lower(backend)`` picks an execution target by name, and
+``.compile(steps).run()`` executes it.  The same plan runs on all three
+in-tree backends with identical results.
 
 Run: ``PYTHONPATH=src python examples/quickstart.py``
 """
 
-from repro.core import DagTranslator, optimize
-from repro.workflow import Runtime
+from repro import swirl
 
 # 1. Describe the workflow: preprocess fans out to two trainers, whose
 #    outputs meet in an evaluation step; a report consumes the evaluation.
-translator = DagTranslator(
-    edges={
-        "preprocess": ["train_a", "train_b"],
-        "train_a": ["evaluate"],
-        "train_b": ["evaluate"],
-        "evaluate": ["report"],
-        "report": [],
-    },
-    mapping={
-        "preprocess": ("cpu0",),
-        "train_a": ("gpu0",),
-        "train_b": ("gpu1",),
-        "evaluate": ("gpu0",),  # co-located with train_a → R1 kicks in
-        "report": ("cpu0",),
-    },
-)
+edges = {
+    "preprocess": ["train_a", "train_b"],
+    "train_a": ["evaluate"],
+    "train_b": ["evaluate"],
+    "evaluate": ["report"],
+    "report": [],
+}
+mapping = {
+    "preprocess": ("cpu0",),
+    "train_a": ("gpu0",),
+    "train_b": ("gpu1",),
+    "evaluate": ("gpu0",),  # co-located with train_a → R1 kicks in
+    "report": ("cpu0",),
+}
 
-# 2. Encode with the paper's ⟦·⟧ and apply the rewriting optimiser.
-plan = translator.translate()
-optimised, stats = optimize(plan)
-print("=== SWIRL plan (optimised) ===")
-print(optimised.pretty())
-print(f"\ncommunications: {plan.comm_count()} -> {optimised.comm_count()} "
-      f"(R1/R2 removed {stats.removed})\n")
+# 2. trace → Plan, then optimise with the paper's ⟦·⟧ rewriting.  The
+#    certificate is Thm. 1 checked mechanically: plan ≈ optimised plan.
+plan = swirl.trace(edges, mapping=mapping).optimize(certify=True)
+print(plan.explain())
 
-# 3. Attach step bodies and execute on the fault-tolerant runtime.
-reports: list[str] = []
+# 3. Attach step bodies, lower to a backend by name, and run.
 step_fns = {
     "preprocess": lambda inp: {"d^preprocess": list(range(10))},
     "train_a": lambda inp: {"d^train_a": sum(inp["d^preprocess"])},
@@ -42,12 +41,14 @@ step_fns = {
     "evaluate": lambda inp: {
         "d^evaluate": inp["d^train_a"] + inp["d^train_b"]
     },
-    # sink step: no output ports — it delivers the result out of band
-    "report": lambda inp: reports.append(f"score = {inp['d^evaluate']}") or {},
+    # sink step: no output ports — the score stays in cpu0's data scope
+    "report": lambda inp: {},
 }
-rt = Runtime(optimised, step_fns)
-rt.run()
-print("report:", reports[0])
-assert reports == ["score = 54"]
-assert rt.payload("cpu0", "d^evaluate") == 54  # shipped to cpu0 for report
+
+for backend in ("inprocess", "threaded", "jax"):
+    result = plan.lower(backend).compile(step_fns).run()
+    score = result.payload("cpu0", "d^evaluate")
+    print(f"{backend:>10}: score = {score}")
+    assert score == 54  # identical on every backend (bisimulation!)
+
 print("OK")

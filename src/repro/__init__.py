@@ -1,0 +1,35 @@
+"""SWIRL reproduction — an intermediate representation for scientific
+workflows, grown into a staged, multi-backend compilation toolchain.
+
+The single front door is the staged API (:mod:`repro.swirl`)::
+
+    from repro import swirl
+
+    plan = swirl.trace(edges, mapping=mapping).optimize()
+    result = plan.lower("threaded").compile(step_fns).run()
+
+Subpackages are imported lazily so that ``import repro`` stays cheap (the
+``jax`` backend, models, and kernels only load when used).
+"""
+
+from importlib import import_module
+
+__version__ = "0.1.0"
+
+_SUBMODULES = (
+    "api",
+    "backends",
+    "core",
+    "swirl",
+    "workflow",
+)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

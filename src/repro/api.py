@@ -1,0 +1,441 @@
+"""The staged-compilation pipeline — the single front door to the toolchain.
+
+Modeled on JAX's AOT flow (``jit(f).trace(...).lower(...).compile()``), the
+SWIRL toolchain is staged as::
+
+    trace   front-end description  → Plan        (encode ⟦·⟧, §3.2)
+    optimize Plan                  → Plan        (rewriting ⟦·⟧, §4 + R3)
+    lower   Plan × backend/placement → Lowered   (backend selection)
+    compile Lowered × step bodies  → Executable  (runnable artifact)
+    run     Executable             → ExecutionResult
+
+End to end::
+
+    from repro import swirl
+
+    result = (
+        swirl.trace(edges, mapping=mapping)
+        .optimize()
+        .lower("threaded")
+        .compile(step_fns)
+        .run()
+    )
+
+Every stage is a value: a :class:`Plan` can be optimised twice with
+different rule sets, lowered to several backends, explained
+(:meth:`Plan.explain`), or certified against the original system with the
+weak-barbed-bisimulation checker of :mod:`repro.core.bisim` (Thm. 1).
+
+Backends resolve by name through :mod:`repro.backends`; ``inprocess``,
+``threaded`` and ``jax`` ship in-tree.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.backends import get_backend
+from repro.backends.base import (
+    BackendProgram,
+    ExecutionResult,
+    PayloadKey,
+)
+from repro.core.compile import StepFn, StepMeta
+from repro.core.encoding import encode
+from repro.core.graph import DistributedWorkflowInstance
+from repro.core.optimizer import REWRITE_RULES, OptimizationStats
+from repro.core.parser import parse_system
+from repro.core.syntax import Exec, WorkflowSystem, actions
+from repro.core.translate import DagTranslator, SWIRLTranslator
+
+__all__ = [
+    "trace",
+    "Plan",
+    "Lowered",
+    "Executable",
+    "AppliedRewrite",
+    "BisimCertificate",
+    "ExecutionResult",
+]
+
+
+# ---------------------------------------------------------------------------
+# trace — front-end → Plan
+# ---------------------------------------------------------------------------
+
+
+def trace(
+    source: (
+        SWIRLTranslator
+        | DistributedWorkflowInstance
+        | WorkflowSystem
+        | Mapping[str, Sequence[str]]
+        | str
+        | os.PathLike
+    ),
+    *,
+    mapping: Mapping[str, Sequence[str]] | None = None,
+    initial_data: Mapping[str, Any] | None = None,
+) -> "Plan":
+    """Stage a front-end workflow description into a :class:`Plan`.
+
+    Accepted sources:
+
+    * a :class:`~repro.core.translate.SWIRLTranslator` (its
+      :meth:`~repro.core.translate.SWIRLTranslator.instance` is encoded);
+    * a :class:`~repro.core.graph.DistributedWorkflowInstance`;
+    * an already-encoded :class:`~repro.core.syntax.WorkflowSystem`;
+    * a step-adjacency DAG ``{step: [successors]}`` plus the required
+      ``mapping=`` step→locations (sugar for :class:`DagTranslator`);
+    * ``.swirl`` surface syntax — a path to a ``.swirl`` file, or source
+      text containing a location configuration.
+    """
+    if isinstance(source, SWIRLTranslator):
+        inst = source.instance()
+        return Plan(system=encode(inst), instance=inst)
+    if isinstance(source, DistributedWorkflowInstance):
+        return Plan(system=encode(source), instance=source)
+    if isinstance(source, WorkflowSystem):
+        return Plan(system=source)
+    if isinstance(source, Mapping):
+        if mapping is None:
+            raise TypeError(
+                "trace(edges) needs mapping= (step → locations) to place "
+                "the DAG"
+            )
+        translator = DagTranslator(
+            edges=source,
+            mapping=mapping,
+            initial_data=initial_data or {},
+        )
+        inst = translator.instance()
+        return Plan(system=encode(inst), instance=inst)
+    if isinstance(source, (str, os.PathLike)):
+        text = os.fspath(source)
+        if isinstance(source, os.PathLike) or text.endswith(".swirl"):
+            # A filesystem path: a missing file is an error, never
+            # silently re-interpreted as source text.
+            with open(text, encoding="utf-8") as f:
+                text = f.read()
+        return Plan(system=parse_system(text))
+    raise TypeError(f"cannot trace {type(source).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Plan — the traced (and possibly optimised) SWIRL system
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AppliedRewrite:
+    """One optimisation rule application with its removal statistics."""
+
+    rule: str
+    stats: OptimizationStats
+
+
+@dataclass(frozen=True)
+class BisimCertificate:
+    """Mechanical Thm.-1 evidence that optimisation preserved behaviour."""
+
+    equivalent: bool
+    method: str = "weak-barbed-bisimulation"
+    states_original: int = 0
+    states_optimized: int = 0
+
+
+@dataclass(frozen=True)
+class Plan:
+    """A traced SWIRL system, optionally rewritten, ready to lower.
+
+    Immutable: :meth:`optimize` and :meth:`lower` return new values, so one
+    trace can fan out to many backends/rule sets.
+    """
+
+    system: WorkflowSystem
+    instance: DistributedWorkflowInstance | None = None
+    origin: WorkflowSystem | None = None  # pre-optimisation system
+    rewrites: tuple[AppliedRewrite, ...] = ()
+    certificate: BisimCertificate | None = None
+
+    # -- optimisation -------------------------------------------------------
+    def optimize(
+        self,
+        rules: Sequence[str] = ("R1R2",),
+        *,
+        certify: bool = False,
+        max_states: int = 20_000,
+    ) -> "Plan":
+        """Apply rewriting rules (Def. 15 and beyond) in order.
+
+        ``rules`` names entries of
+        :data:`repro.core.optimizer.REWRITE_RULES` — ``"R1R2"`` is the
+        paper's local+duplicate communication removal, ``"R3"`` the
+        spatial-constraint deduplication.  With ``certify=True`` the result
+        carries a :class:`BisimCertificate` checking ``W ≈ ⟦W⟧`` exactly
+        (exponential in system size — keep certified systems small).
+        """
+        system = self.system
+        applied = list(self.rewrites)
+        for rule in rules:
+            try:
+                rewrite = REWRITE_RULES[rule]
+            except KeyError:
+                raise ValueError(
+                    f"unknown rewrite rule {rule!r}; "
+                    f"known: {sorted(REWRITE_RULES)}"
+                ) from None
+            system, stats = rewrite(system)
+            applied.append(AppliedRewrite(rule, stats))
+        plan = replace(
+            self,
+            system=system,
+            origin=self.origin if self.origin is not None else self.system,
+            rewrites=tuple(applied),
+            certificate=None,
+        )
+        return plan.certify(max_states=max_states) if certify else plan
+
+    def certify(self, *, max_states: int = 20_000) -> "Plan":
+        """Attach Thm.-1 evidence that this plan ≈ its unoptimised origin."""
+        from repro.core.bisim import weak_barbed_bisimilar
+        from repro.core.semantics import reachable_states
+
+        origin = self.origin if self.origin is not None else self.system
+        cert = BisimCertificate(
+            equivalent=weak_barbed_bisimilar(
+                origin, self.system, max_states=max_states
+            ),
+            states_original=len(
+                reachable_states(origin, max_states=max_states)
+            ),
+            states_optimized=len(
+                reachable_states(self.system, max_states=max_states)
+            ),
+        )
+        if not cert.equivalent:
+            raise AssertionError(
+                "optimisation broke weak barbed bisimilarity — this is a "
+                "bug in the rewrite rules"
+            )
+        return replace(self, certificate=cert)
+
+    # -- aggregates ---------------------------------------------------------
+    @property
+    def stats(self) -> OptimizationStats:
+        """Merged removal statistics across every applied rewrite."""
+        total = OptimizationStats()
+        for r in self.rewrites:
+            total.removed_local += r.stats.removed_local
+            total.removed_duplicate += r.stats.removed_duplicate
+            total.kept += r.stats.kept
+            for loc, n in r.stats.by_location.items():
+                total.by_location[loc] = total.by_location.get(loc, 0) + n
+        return total
+
+    def steps(self) -> tuple[str, ...]:
+        """Every step name executed anywhere in the system."""
+        names = {
+            a.step
+            for cfg in self.system.configs
+            for a in actions(cfg.trace)
+            if isinstance(a, Exec)
+        }
+        return tuple(sorted(names))
+
+    def placement(self) -> dict[str, tuple[str, ...]]:
+        """Step → locations, from the exec predicates (``M`` reconstructed)."""
+        out: dict[str, tuple[str, ...]] = {}
+        for cfg in self.system.configs:
+            for a in actions(cfg.trace):
+                if isinstance(a, Exec):
+                    out[a.step] = tuple(sorted(a.locations))
+        return out
+
+    # -- lowering -----------------------------------------------------------
+    def lower(
+        self,
+        backend: str = "threaded",
+        *,
+        placement: Mapping[str, Sequence[str]] | None = None,
+        **options: Any,
+    ) -> "Lowered":
+        """Select an execution backend (and optionally re-place steps).
+
+        ``placement`` overrides the step→locations mapping ``M`` and
+        re-derives the plan (re-encode + re-apply the recorded rewrites) —
+        the Jaradat-style separation of plan construction from placement.
+        Backend-specific ``options`` (channel fault injection, retry
+        policies, device lists…) are validated here, before any execution.
+        """
+        plan = self._replaced(placement) if placement else self
+        b = get_backend(backend)
+        b.validate_options(options)
+        return Lowered(plan=plan, backend_name=backend, options=dict(options))
+
+    def _replaced(
+        self, placement: Mapping[str, Sequence[str]]
+    ) -> "Plan":
+        if self.instance is None:
+            raise ValueError(
+                "placement override needs a Plan traced from a front-end "
+                "instance (not raw .swirl text or a WorkflowSystem)"
+            )
+        unknown = set(placement) - set(self.instance.mapping)
+        if unknown:
+            raise ValueError(
+                f"placement names unknown steps {sorted(unknown)}; "
+                f"steps are {sorted(self.instance.mapping)}"
+            )
+        new_mapping = {
+            s: tuple(placement.get(s, ls))
+            for s, ls in self.instance.mapping.items()
+        }
+        locations = frozenset(l for ls in new_mapping.values() for l in ls)
+        inst = replace(
+            self.instance,
+            locations=locations,
+            mapping=new_mapping,
+            initial_data={
+                l: ds
+                for l, ds in self.instance.initial_data.items()
+                if l in locations
+            },
+        )
+        plan = Plan(system=encode(inst), instance=inst)
+        rules = [r.rule for r in self.rewrites]
+        return plan.optimize(rules) if rules else plan
+
+    # -- introspection ------------------------------------------------------
+    def explain(self) -> str:
+        """Human-readable report: trace, rewrites applied, placement."""
+        lines = ["== SWIRL plan =="]
+        lines.append(
+            f"locations: {len(self.system.locations())}  "
+            f"actions: {self.system.total_actions()}  "
+            f"communications: {self.system.comm_count()}"
+        )
+        lines.append("")
+        lines.append("-- placement (step -> M(s)) --")
+        for s, locs in sorted(self.placement().items()):
+            lines.append(f"  {s:<24} {', '.join(locs)}")
+        lines.append("")
+        lines.append("-- rewrites applied --")
+        if not self.rewrites:
+            lines.append("  (none — unoptimised plan)")
+        for r in self.rewrites:
+            lines.append(
+                f"  {r.rule:<6} removed {r.stats.removed:>4} "
+                f"(local {r.stats.removed_local}, "
+                f"duplicate {r.stats.removed_duplicate})"
+            )
+        if self.certificate is not None:
+            c = self.certificate
+            lines.append(
+                f"  certificate: {c.method} equivalent={c.equivalent} "
+                f"({c.states_original} -> {c.states_optimized} states)"
+            )
+        lines.append("")
+        lines.append("-- per-location traces --")
+        lines.append(self.system.pretty())
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Lowered — plan × backend, awaiting step bodies
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Lowered:
+    """A plan bound to a backend; :meth:`compile` attaches step bodies."""
+
+    plan: Plan
+    backend_name: str
+    options: dict[str, Any] = field(default_factory=dict)
+
+    def compile(
+        self, steps: Mapping[str, StepFn | StepMeta]
+    ) -> "Executable":
+        """Attach step bodies (callables or :class:`StepMeta`) and compile.
+
+        ``steps`` must cover every exec predicate in the plan; extra
+        entries are ignored (one registry can serve many plans).
+        """
+        metas: dict[str, StepMeta] = {}
+        needed = set(self.plan.steps())
+        missing = needed - set(steps)
+        if missing:
+            raise KeyError(
+                f"no step function registered for {sorted(missing)}"
+            )
+        for name in sorted(needed):
+            spec = steps[name]
+            metas[name] = (
+                spec if isinstance(spec, StepMeta) else StepMeta(fn=spec)
+            )
+        backend = get_backend(self.backend_name)
+        program = backend.compile(self.plan.system, metas, self.options)
+        return Executable(
+            plan=self.plan,
+            backend_name=self.backend_name,
+            program=program,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Executable — the runnable artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Executable:
+    """A compiled workflow: run it (sync or async), snapshot it, resume it."""
+
+    plan: Plan
+    backend_name: str
+    program: BackendProgram
+
+    def run(
+        self,
+        *,
+        initial_payloads: Mapping[PayloadKey, Any] | None = None,
+    ) -> ExecutionResult:
+        return self.program.run(initial_payloads)
+
+    def run_async(
+        self,
+        *,
+        initial_payloads: Mapping[PayloadKey, Any] | None = None,
+    ) -> Future:
+        """Run on a daemon thread; the returned future yields the result.
+
+        Daemon so an abandoned (hung) run never blocks interpreter exit.
+        """
+        fut: Future = Future()
+
+        def worker() -> None:
+            if not fut.set_running_or_notify_cancel():
+                return
+            try:
+                fut.set_result(self.run(initial_payloads=initial_payloads))
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+
+        threading.Thread(
+            target=worker, name="swirl-run-async", daemon=True
+        ).start()
+        return fut
+
+    def checkpoint(self):
+        """Consistent snapshot (backends advertising ``"checkpoint"``)."""
+        return self.program.checkpoint()
+
+    def restore(self, ckpt) -> "Executable":
+        """Resume from a snapshot: the next :meth:`run` continues it."""
+        self.program.restore(ckpt)
+        return self

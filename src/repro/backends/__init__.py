@@ -1,0 +1,113 @@
+"""Pluggable backend registry for the staged-compilation pipeline.
+
+``Plan.lower(backend="...")`` resolves names through this registry.  Three
+backends are built in (``inprocess``, ``threaded``, ``jax``); third parties
+add their own either programmatically::
+
+    from repro.backends import register_backend
+    register_backend("mycluster", MyClusterBackend)
+
+or declaratively via the ``repro.backends`` entry-point group::
+
+    [project.entry-points."repro.backends"]
+    mycluster = "mypkg.backend:factory"
+
+Factories are zero-argument callables returning a :class:`Backend`; they are
+invoked lazily so registering (or merely installing) a backend never imports
+its heavyweight dependencies.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from .base import (
+    Backend,
+    BackendCapabilityError,
+    BackendProgram,
+    ExecutionResult,
+    UnknownBackendError,
+)
+
+__all__ = [
+    "Backend",
+    "BackendProgram",
+    "BackendCapabilityError",
+    "ExecutionResult",
+    "UnknownBackendError",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+BackendFactory = Callable[[], Backend]
+
+_REGISTRY: dict[str, BackendFactory] = {}
+_entry_points_loaded = False
+
+
+def _builtin(module: str) -> BackendFactory:
+    def load() -> Backend:
+        import importlib
+
+        return importlib.import_module(module).factory()
+
+    return load
+
+
+_REGISTRY.update(
+    {
+        "inprocess": _builtin("repro.backends.inprocess"),
+        "threaded": _builtin("repro.backends.threaded_backend"),
+        "jax": _builtin("repro.backends.jax_backend"),
+    }
+)
+
+
+def _load_entry_points() -> None:
+    """Merge ``repro.backends`` entry points into the registry (once)."""
+    global _entry_points_loaded
+    if _entry_points_loaded:
+        return
+    _entry_points_loaded = True
+    try:
+        from importlib.metadata import entry_points
+
+        for ep in entry_points(group="repro.backends"):
+            # Explicit registrations and built-ins win over entry points.
+            _REGISTRY.setdefault(ep.name, ep.load)
+    except Exception:  # pragma: no cover - metadata lookup is best-effort
+        pass
+
+
+def register_backend(
+    name: str, factory: BackendFactory, *, overwrite: bool = False
+) -> None:
+    """Register ``factory`` under ``name`` (entry-point style, in process)."""
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"backend {name!r} is already registered")
+    _REGISTRY[name] = factory
+
+
+def get_backend(name: str) -> Backend:
+    """Instantiate the backend registered under ``name``."""
+    if name not in _REGISTRY:
+        _load_entry_points()
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise UnknownBackendError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+    backend = factory()
+    if not isinstance(backend, Backend):
+        raise TypeError(
+            f"backend factory for {name!r} returned {type(backend).__name__},"
+            " not a repro.backends.Backend"
+        )
+    return backend
+
+
+def available_backends() -> tuple[str, ...]:
+    _load_entry_points()
+    return tuple(sorted(_REGISTRY))

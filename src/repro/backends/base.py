@@ -1,0 +1,119 @@
+"""The ``Backend`` protocol every execution target implements.
+
+A backend turns an (optimised) :class:`~repro.core.syntax.WorkflowSystem`
+plus a step registry into a :class:`BackendProgram` — the backend-specific
+compiled artifact behind :class:`repro.api.Executable`.  Three backends ship
+in-tree (see :mod:`repro.backends`):
+
+======================  =====================================================
+``inprocess``           reduction-driven :class:`repro.workflow.Runtime`
+                        (checkpointable, retry/speculation fault tolerance)
+``threaded``            decentralised per-location threads over channels
+                        (:class:`repro.workflow.ThreadedRuntime`)
+``jax``                 per-location lowering onto a JAX host device mesh;
+                        array payloads are staged with ``jax.device_put``
+======================  =====================================================
+
+Third-party backends register through
+:func:`repro.backends.register_backend` or the ``repro.backends``
+entry-point group declared in ``pyproject.toml``.
+"""
+
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+from repro.core.compile import StepMeta
+from repro.core.syntax import WorkflowSystem
+
+PayloadKey = tuple[str, str]  # (location, data element)
+
+
+class BackendCapabilityError(NotImplementedError):
+    """The selected backend does not support the requested operation."""
+
+
+class UnknownBackendError(KeyError):
+    """No backend registered under the requested name."""
+
+
+@dataclass
+class ExecutionResult:
+    """What one :meth:`repro.api.Executable.run` produced.
+
+    ``data`` maps location → data element → payload: the contents of every
+    location's data scope after the system terminated, identical across
+    backends for the same plan + steps (the bisimulation guarantee made
+    observable).
+    """
+
+    backend: str
+    data: dict[str, dict[str, Any]]
+    stats: Any = None
+
+    def payload(self, location: str, data: str) -> Any:
+        return self.data[location][data]
+
+    def location_data(self, location: str) -> dict[str, Any]:
+        return dict(self.data[location])
+
+
+@dataclass
+class BackendProgram(ABC):
+    """A compiled, runnable artifact for one backend."""
+
+    system: WorkflowSystem
+    steps: Mapping[str, StepMeta]
+    options: dict[str, Any] = field(default_factory=dict)
+
+    @abstractmethod
+    def run(
+        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
+    ) -> ExecutionResult:
+        ...
+
+    # Optional capabilities — backends that support them override.
+    def checkpoint(self):
+        raise BackendCapabilityError(
+            f"backend does not support checkpointing: {type(self).__name__}"
+        )
+
+    def restore(self, ckpt) -> None:
+        raise BackendCapabilityError(
+            f"backend does not support restore: {type(self).__name__}"
+        )
+
+
+class Backend(ABC):
+    """Factory for :class:`BackendProgram` instances.
+
+    ``capabilities`` advertises optional features (``"checkpoint"``,
+    ``"fault-injection"``, ``"mesh"``); :mod:`repro.api` consults it to fail
+    fast instead of deep inside a run.
+    """
+
+    name: str = "abstract"
+    capabilities: frozenset[str] = frozenset()
+
+    @abstractmethod
+    def compile(
+        self,
+        system: WorkflowSystem,
+        steps: Mapping[str, StepMeta],
+        options: Mapping[str, Any],
+    ) -> BackendProgram:
+        ...
+
+    def validate_options(self, options: Mapping[str, Any]) -> None:
+        """Reject unknown lowering options early (override to extend)."""
+        unknown = set(options) - self.known_options()
+        if unknown:
+            raise TypeError(
+                f"unknown options for backend {self.name!r}: "
+                f"{sorted(unknown)}; supported: {sorted(self.known_options())}"
+            )
+
+    def known_options(self) -> frozenset[str]:
+        return frozenset()

@@ -1,0 +1,107 @@
+"""``inprocess`` backend — the reduction-driven, checkpointable Runtime.
+
+Execution *is* SWIRL reduction: the program repeatedly applies the paper's
+(EXEC)/(COMM) rules with real effects on a thread pool.  This is the backend
+with the richest fault-tolerance story (retry, straggler speculation,
+heartbeats, consistent snapshots), so it also implements the optional
+``checkpoint``/``restore`` capability.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+from repro._compat import suppress_deprecations
+from repro.core.compile import StepMeta
+from repro.core.parser import dumps
+from repro.core.syntax import WorkflowSystem
+
+from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
+
+
+class InprocessProgram(BackendProgram):
+    # un-annotated → plain class attributes, not dataclass fields
+    _runtime = None
+    _pending_ckpt = None
+
+    def run(
+        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
+    ) -> ExecutionResult:
+        from repro.workflow.runtime import Runtime
+
+        step_fns = {name: meta.fn for name, meta in self.steps.items()}
+        expected = {
+            name: meta.expected_seconds
+            for name, meta in self.steps.items()
+            if meta.expected_seconds is not None
+        }
+        kwargs = dict(self.options)
+        kwargs.setdefault("expected_s", expected or None)
+        with suppress_deprecations():
+            if self._pending_ckpt is not None:
+                rt = Runtime.restore(self._pending_ckpt, step_fns, **kwargs)
+                if initial_payloads:
+                    rt.payloads.update(initial_payloads)
+                self._pending_ckpt = None
+            else:
+                rt = Runtime(
+                    self.system,
+                    step_fns,
+                    initial_payloads=initial_payloads,
+                    **kwargs,
+                )
+            self._runtime = rt
+            stats = rt.run()
+        data: dict[str, dict[str, Any]] = {
+            loc: {} for loc in self.system.locations()
+        }
+        for (loc, d), v in rt.payloads.items():
+            data.setdefault(loc, {})[d] = v
+        return ExecutionResult(backend="inprocess", data=data, stats=stats)
+
+    def checkpoint(self):
+        from repro.workflow.runtime import Checkpoint
+
+        if self._runtime is not None:
+            return self._runtime.checkpoint()
+        # Pristine snapshot: nothing has run yet.
+        return Checkpoint(
+            system_text=dumps(self.system),
+            payloads={},
+            completed_execs=frozenset(),
+        )
+
+    def restore(self, ckpt) -> None:
+        self._pending_ckpt = ckpt
+
+
+class InprocessBackend(Backend):
+    name = "inprocess"
+    capabilities = frozenset({"checkpoint", "retry", "speculation"})
+
+    def known_options(self) -> frozenset[str]:
+        return frozenset(
+            {
+                "retry",
+                "speculation",
+                "expected_s",
+                "max_workers",
+                "checkpoint_every",
+                "checkpoint_path",
+                "heartbeat",
+            }
+        )
+
+    def compile(
+        self,
+        system: WorkflowSystem,
+        steps: Mapping[str, StepMeta],
+        options: Mapping[str, Any],
+    ) -> InprocessProgram:
+        return InprocessProgram(
+            system=system, steps=dict(steps), options=dict(options)
+        )
+
+
+def factory() -> Backend:
+    return InprocessBackend()

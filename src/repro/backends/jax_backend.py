@@ -1,0 +1,163 @@
+"""``jax`` backend — lower location traces onto a JAX host device mesh.
+
+Each SWIRL location is pinned to a JAX device (round-robin over the host
+mesh, or an explicit ``devices=`` option).  The program then *reduces* the
+system deterministically:
+
+* (EXEC) runs the step function with its inputs resident on the leader
+  location's device and replicates ``Out^D(s)`` onto every device of
+  ``M(s)`` — the rule's "add to every ``D_i``" becomes ``jax.device_put``;
+* (COMM) moves the payload to the destination location's device.
+
+Only array payloads (``jax.Array`` / ``numpy.ndarray``) are staged through
+the device API; plain Python payloads are copied by reference, so results
+are bit-identical with the other backends on non-numeric workflows.  This is
+the lowering the mesh trainer builds on: SWIRL send/recv pairs between
+locations on one mesh axis are exactly what ``ppermute``-style collectives
+implement at scale (see ``launch/sharding.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+from repro.core.compile import StepMeta
+from repro.core.semantics import (
+    CommTransition,
+    ExecTransition,
+    apply_transition,
+    enabled_transitions,
+)
+from repro.core.syntax import WorkflowSystem
+
+from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
+
+
+def _is_array(x: Any) -> bool:
+    import jax
+    import numpy as np
+
+    return isinstance(x, (jax.Array, np.ndarray))
+
+
+class JaxMeshProgram(BackendProgram):
+    def _device_map(self) -> dict[str, Any]:
+        import jax
+
+        devices = self.options.get("devices")
+        if devices is None:
+            platform = self.options.get("platform")
+            devices = jax.devices(platform) if platform else jax.devices()
+        locs = sorted(self.system.locations())
+        return {loc: devices[i % len(devices)] for i, loc in enumerate(locs)}
+
+    def run(
+        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
+    ) -> ExecutionResult:
+        import jax
+
+        device_of = self._device_map()
+        stats = {
+            "execs": 0,
+            "comms": 0,
+            "device_puts": 0,
+            "bytes_moved": 0,
+            "devices": {l: str(d) for l, d in device_of.items()},
+        }
+
+        def place(loc: str, value: Any) -> Any:
+            if not _is_array(value):
+                return value
+            stats["device_puts"] += 1
+            stats["bytes_moved"] += int(getattr(value, "nbytes", 0))
+            return jax.device_put(value, device_of[loc])
+
+        payloads: dict[PayloadKey, Any] = {}
+        for (loc, d), v in (initial_payloads or {}).items():
+            payloads[(loc, d)] = place(loc, v)
+
+        state = self.system
+        max_rounds = int(self.options.get("max_rounds", 1_000_000))
+        for _ in range(max_rounds):
+            progressed = False
+            # Drain communications first (they are τ — silent, confluent).
+            while True:
+                comm = next(
+                    (
+                        t
+                        for t in enabled_transitions(state)
+                        if isinstance(t, CommTransition)
+                    ),
+                    None,
+                )
+                if comm is None:
+                    break
+                s = comm.send
+                state = apply_transition(state, comm)
+                payloads[(s.dst, s.data)] = place(
+                    s.dst, payloads[(s.src, s.data)]
+                )
+                stats["comms"] += 1
+                progressed = True
+            execs = sorted(
+                (
+                    t
+                    for t in enabled_transitions(state)
+                    if isinstance(t, ExecTransition)
+                ),
+                key=lambda t: t.action.step,
+            )
+            if execs:
+                act = execs[0].action
+                leader = sorted(act.locations)[0]
+                inputs = {
+                    d: payloads[(leader, d)] for d in sorted(act.inputs)
+                }
+                out = self.steps[act.step].fn(inputs)
+                missing = act.outputs - set(out)
+                if missing:
+                    raise RuntimeError(
+                        f"step {act.step!r} did not produce {sorted(missing)}"
+                    )
+                state = apply_transition(state, execs[0])
+                for loc in act.locations:
+                    for d in act.outputs:
+                        payloads[(loc, d)] = place(loc, out[d])
+                stats["execs"] += 1
+                progressed = True
+            if not progressed:
+                break
+
+        if not state.is_terminated():
+            raise RuntimeError(
+                "jax backend: workflow did not terminate; remaining:\n"
+                + state.pretty()
+            )
+        data: dict[str, dict[str, Any]] = {
+            loc: {} for loc in self.system.locations()
+        }
+        for (loc, d), v in payloads.items():
+            data.setdefault(loc, {})[d] = v
+        return ExecutionResult(backend="jax", data=data, stats=stats)
+
+
+class JaxBackend(Backend):
+    name = "jax"
+    capabilities = frozenset({"mesh", "device-placement"})
+
+    def known_options(self) -> frozenset[str]:
+        return frozenset({"devices", "platform", "max_rounds"})
+
+    def compile(
+        self,
+        system: WorkflowSystem,
+        steps: Mapping[str, StepMeta],
+        options: Mapping[str, Any],
+    ) -> JaxMeshProgram:
+        return JaxMeshProgram(
+            system=system, steps=dict(steps), options=dict(options)
+        )
+
+
+def factory() -> Backend:
+    return JaxBackend()

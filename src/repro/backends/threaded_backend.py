@@ -1,0 +1,82 @@
+"""``threaded`` backend — decentralised per-location threads over channels.
+
+This is the execution model of the paper's generated TCP programs: every
+location interprets only its own compiled bundle; there is no central
+orchestrator.  Channel fault injection (drops / delays, seeded per endpoint)
+threads through the ``Lowered`` options, which is how the fault-tolerance
+experiments select their failure model.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+from repro._compat import suppress_deprecations
+from repro.core.compile import StepMeta, build_bundles
+from repro.core.syntax import WorkflowSystem
+
+from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
+
+
+class ThreadedProgram(BackendProgram):
+    def run(
+        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
+    ) -> ExecutionResult:
+        from repro.workflow.channels import ChannelRegistry
+        from repro.workflow.threaded import ThreadedRuntime
+
+        opts = dict(self.options)
+        registry = opts.pop("channels", None)
+        channel_kwargs = {
+            k: opts.pop(k)
+            for k in ("drop_prob", "delay_s", "seed")
+            if k in opts
+        }
+        if registry is None:
+            registry = ChannelRegistry(**channel_kwargs)
+        elif channel_kwargs:
+            raise TypeError(
+                "pass either channels= or per-channel options "
+                f"({sorted(channel_kwargs)}), not both"
+            )
+        step_fns = {name: meta.fn for name, meta in self.steps.items()}
+        bundles = build_bundles(
+            self.system, step_fns, step_meta=dict(self.steps)
+        )
+        with suppress_deprecations():
+            rt = ThreadedRuntime(
+                bundles,
+                initial_payloads=initial_payloads,
+                channels=registry,
+                **opts,
+            )
+            data = rt.run()
+        return ExecutionResult(
+            backend="threaded",
+            data={loc: dict(d) for loc, d in data.items()},
+            stats=registry.stats(),
+        )
+
+
+class ThreadedBackend(Backend):
+    name = "threaded"
+    capabilities = frozenset({"decentralised", "fault-injection"})
+
+    def known_options(self) -> frozenset[str]:
+        return frozenset(
+            {"channels", "drop_prob", "delay_s", "seed", "timeout_s"}
+        )
+
+    def compile(
+        self,
+        system: WorkflowSystem,
+        steps: Mapping[str, StepMeta],
+        options: Mapping[str, Any],
+    ) -> ThreadedProgram:
+        return ThreadedProgram(
+            system=system, steps=dict(steps), options=dict(options)
+        )
+
+
+def factory() -> Backend:
+    return ThreadedBackend()

@@ -49,7 +49,14 @@ from .semantics import (
     run,
 )
 from .encoding import building_block, encode
-from .optimizer import OptimizationStats, optimize, optimize_spatial
+from .optimizer import (
+    REWRITE_RULES,
+    OptimizationStats,
+    optimize,
+    optimize_spatial,
+    rewrite_spatial,
+    rewrite_system,
+)
 from .bisim import weak_barbed_bisimilar
 from .parser import dumps, loads, parse_system, parse_trace
 from .translate import (
@@ -63,6 +70,7 @@ from .compile import (
     Channel,
     LocationBundle,
     StepMeta,
+    build_bundles,
     compile_bundles,
     emit_all,
     emit_python_source,
@@ -102,6 +110,9 @@ __all__ = [
     "building_block",
     "optimize",
     "optimize_spatial",
+    "rewrite_system",
+    "rewrite_spatial",
+    "REWRITE_RULES",
     "OptimizationStats",
     "weak_barbed_bisimilar",
     "parse_system",
@@ -116,6 +127,7 @@ __all__ = [
     "StepMeta",
     "Channel",
     "LocationBundle",
+    "build_bundles",
     "compile_bundles",
     "emit_python_source",
     "emit_all",

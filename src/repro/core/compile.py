@@ -87,7 +87,7 @@ class LocationBundle:
         return [a.step for a in actions(self.trace) if isinstance(a, Exec)]
 
 
-def compile_bundles(
+def build_bundles(
     w: WorkflowSystem,
     step_fns: Mapping[str, StepFn],
     *,
@@ -98,7 +98,8 @@ def compile_bundles(
     ``step_fns`` must cover every step executed anywhere in ``w``; a step
     mapped onto several locations (spatial constraint) receives the same
     callable everywhere — the runtime synchronises the exec like the (EXEC)
-    rule does.
+    rule does.  Canonical entry point used by the backends; the legacy name
+    :func:`compile_bundles` is a deprecation shim over it.
     """
     bundles: dict[str, LocationBundle] = {}
     for cfg in w.configs:
@@ -118,6 +119,22 @@ def compile_bundles(
             steps=local_steps,
         )
     return bundles
+
+
+def compile_bundles(
+    w: WorkflowSystem,
+    step_fns: Mapping[str, StepFn],
+    *,
+    step_meta: Mapping[str, StepMeta] | None = None,
+) -> dict[str, LocationBundle]:
+    """Deprecated shim for :func:`build_bundles` (legacy free function)."""
+    from repro._compat import warn_legacy
+
+    warn_legacy(
+        "repro.core.compile_bundles()",
+        'swirl.trace(...).lower("threaded").compile(step_fns)',
+    )
+    return build_bundles(w, step_fns, step_meta=step_meta)
 
 
 # ---------------------------------------------------------------------------

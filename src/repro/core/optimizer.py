@@ -103,8 +103,11 @@ def _rewrite(t: Trace, seen: set, stats: OptimizationStats, loc: str) -> Trace:
     raise TypeError(f"not a trace: {t!r}")
 
 
-def optimize(w: WorkflowSystem) -> tuple[WorkflowSystem, OptimizationStats]:
-    """``⟦W⟧`` — rewrite every location configuration (Def. 15)."""
+def rewrite_system(w: WorkflowSystem) -> tuple[WorkflowSystem, OptimizationStats]:
+    """``⟦W⟧`` — rewrite every location configuration (Def. 15, rules R1+R2).
+
+    Canonical entry point used by :meth:`repro.api.Plan.optimize`.
+    """
     stats = OptimizationStats()
     configs = []
     for c in w.configs:
@@ -112,6 +115,14 @@ def optimize(w: WorkflowSystem) -> tuple[WorkflowSystem, OptimizationStats]:
         new_trace = _rewrite(c.trace, seen, stats, c.location)
         configs.append(LocationConfig(c.location, c.data, new_trace))
     return WorkflowSystem(tuple(configs)), stats
+
+
+def optimize(w: WorkflowSystem) -> tuple[WorkflowSystem, OptimizationStats]:
+    """Deprecated shim for :func:`rewrite_system` (legacy free function)."""
+    from repro._compat import warn_legacy
+
+    warn_legacy("repro.core.optimize()", "swirl.trace(...).optimize()")
+    return rewrite_system(w)
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +166,7 @@ def _remove_one(t: Trace, pred) -> tuple[Trace, bool]:
     raise TypeError(f"not a trace: {t!r}")
 
 
-def optimize_spatial(
+def rewrite_spatial(
     w: WorkflowSystem,
 ) -> tuple[WorkflowSystem, OptimizationStats]:
     """R3: drop send/recv pairs whose destination co-executes the producer.
@@ -212,3 +223,25 @@ def optimize_spatial(
         WorkflowSystem(tuple(new_cfg[c.location] for c in w.configs)),
         stats,
     )
+
+
+def optimize_spatial(
+    w: WorkflowSystem,
+) -> tuple[WorkflowSystem, OptimizationStats]:
+    """Deprecated shim for :func:`rewrite_spatial` (legacy free function)."""
+    from repro._compat import warn_legacy
+
+    warn_legacy(
+        "repro.core.optimize_spatial()",
+        'swirl.trace(...).optimize(rules=("R1R2", "R3"))',
+    )
+    return rewrite_spatial(w)
+
+
+#: The rule sets :meth:`repro.api.Plan.optimize` can apply, in canonical
+#: application order.  "R1R2" is the paper's Def.-15 scan (local + duplicate
+#: communication removal); "R3" is the spatial-constraint deduplication.
+REWRITE_RULES = {
+    "R1R2": rewrite_system,
+    "R3": rewrite_spatial,
+}

@@ -36,7 +36,17 @@ class SWIRLTranslator(ABC):
         ...
 
     def translate(self) -> WorkflowSystem:
-        """Front-end → SWIRL system via the paper's encoding ``⟦·⟧``."""
+        """Front-end → SWIRL system via the paper's encoding ``⟦·⟧``.
+
+        Deprecated: the staged pipeline (``swirl.trace(translator)``) calls
+        :func:`~repro.core.encoding.encode` on :meth:`instance` directly and
+        keeps the instance around for placement/explain support.
+        """
+        from repro._compat import warn_legacy
+
+        warn_legacy(
+            f"{type(self).__name__}.translate()", "swirl.trace(translator)"
+        )
         return encode(self.instance())
 
 

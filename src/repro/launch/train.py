@@ -32,15 +32,15 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro import swirl
 from repro.configs import get_config
-from repro.core import encode, optimize, optimize_spatial
 from repro.core.translate import TrainPipelineTranslator
 from repro.data import SyntheticLM
 from repro.models import Model
 from repro.optim import AdamWConfig
 from repro.optim import adamw as adamw_mod
 from repro.optim.compress import allreduce_mean, compress, decompress
-from repro.workflow import Runtime, RetryPolicy
+from repro.workflow import RetryPolicy
 from repro.ckpt import async_save, latest_step, load_checkpoint
 from .steps import make_grad_step
 
@@ -143,14 +143,14 @@ def train(
     translator = TrainPipelineTranslator(
         n_pods=n_pods, with_checkpoint=ckpt_dir is not None
     )
-    inst = translator.instance()
-    plan, opt_stats = optimize(encode(inst))
-    plan, r3_stats = optimize_spatial(plan)  # R3: grad_sync re-broadcast
+    plan = swirl.trace(translator).optimize(rules=("R1R2", "R3"))
+    opt_stats, r3_stats = (r.stats for r in plan.rewrites)
     print(
-        f"[swirl] plan: {plan.total_actions()} actions, "
-        f"{plan.comm_count()} comms (Def.15 removed {opt_stats.removed}, "
-        f"R3 removed {r3_stats.removed})"
+        f"[swirl] plan: {plan.system.total_actions()} actions, "
+        f"{plan.system.comm_count()} comms (Def.15 removed "
+        f"{opt_stats.removed}, R3 removed {r3_stats.removed})"
     )
+    lowered = plan.lower("inprocess", retry=RetryPolicy(max_retries=2))
 
     # Resume or init per-pod replicas (identical params across pods).
     params = model.init(jax.random.key(0))
@@ -182,17 +182,10 @@ def train(
             payloads[(f"pod{i}", f"iter_{i}")] = it
             payloads[(f"pod{i}", f"params_{i}")] = params
             payloads[(f"pod{i}", f"opt_{i}")] = opt_state
-        # the shard step needs its iteration number as instance data
-        plan_it = plan
-        rt = Runtime(
-            plan_it, fns,
-            initial_payloads=payloads,
-            retry=RetryPolicy(max_retries=2),
-        )
         # ``shard_i``/``fwdbwd_i`` read iter/params from the pod's local data
         # scope: declare them as part of each pod's initial D set.
-        rt.run()
-        state = rt.payload("pod0", "state_0")
+        result = lowered.compile(fns).run(initial_payloads=payloads)
+        state = result.payload("pod0", "state_0")
         params, opt_state = state["params"], state["opt"]
         m = state["metrics"]
         history.append(m)

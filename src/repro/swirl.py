@@ -1,0 +1,43 @@
+"""``repro.swirl`` — the public name of the staged-compilation API.
+
+Thin re-export of :mod:`repro.api` so user code reads as the paper's
+toolchain does::
+
+    from repro import swirl
+
+    result = (
+        swirl.trace(edges, mapping=mapping)
+        .optimize()
+        .lower("jax")
+        .compile(step_fns)
+        .run()
+    )
+"""
+
+from .api import (  # noqa: F401
+    AppliedRewrite,
+    BisimCertificate,
+    Executable,
+    ExecutionResult,
+    Lowered,
+    Plan,
+    trace,
+)
+from .backends import (  # noqa: F401
+    available_backends,
+    get_backend,
+    register_backend,
+)
+
+__all__ = [
+    "trace",
+    "Plan",
+    "Lowered",
+    "Executable",
+    "ExecutionResult",
+    "AppliedRewrite",
+    "BisimCertificate",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]

@@ -24,6 +24,17 @@ class ChannelClosed(Exception):
     pass
 
 
+def endpoint_rng(seed: int, endpoint: Endpoint) -> random.Random:
+    """Independent per-endpoint RNG stream.
+
+    ``random.Random`` seeds strings via SHA-512, so mixing the registry seed
+    with the endpoint triple is deterministic across runs and processes
+    (unaffected by ``PYTHONHASHSEED``) while decorrelating the channels.
+    """
+    src, dst, port = endpoint
+    return random.Random(f"{seed}\x1f{src}\x1f{dst}\x1f{port}")
+
+
 @dataclass
 class Message:
     data_name: str
@@ -41,12 +52,16 @@ class Channel:
         drop_prob: float = 0.0,
         delay_s: float = 0.0,
         rng: random.Random | None = None,
+        seed: int = 0,
     ):
         self.endpoint = endpoint
         self._q: queue.Queue[Message] = queue.Queue()
         self.drop_prob = drop_prob
         self.delay_s = delay_s
-        self._rng = rng or random.Random(0)
+        # Each endpoint gets its own stream, derived from the registry seed
+        # mixed with (src, dst, port) — a shared Random(0) would make every
+        # channel drop/delay in lockstep, i.e. perfectly correlated faults.
+        self._rng = rng or endpoint_rng(seed, endpoint)
         self.sent = 0
         self.dropped = 0
         self.delivered = 0
@@ -83,18 +98,27 @@ class Channel:
 
 
 class ChannelRegistry:
-    """Lazily creates one channel per endpoint; thread-safe."""
+    """Lazily creates one channel per endpoint; thread-safe.
 
-    def __init__(self, **channel_kwargs):
+    ``seed`` is the registry-wide fault-injection seed: each channel derives
+    its own RNG from it via :func:`endpoint_rng`, so two registries with the
+    same seed reproduce the same faults while distinct endpoints within one
+    registry stay uncorrelated.
+    """
+
+    def __init__(self, *, seed: int = 0, **channel_kwargs):
         self._channels: dict[Endpoint, Channel] = {}
         self._lock = threading.Lock()
+        self._seed = seed
         self._kwargs = channel_kwargs
 
     def channel(self, src: str, dst: str, port: str) -> Channel:
         key = (src, dst, port)
         with self._lock:
             if key not in self._channels:
-                self._channels[key] = Channel(key, **self._kwargs)
+                self._channels[key] = Channel(
+                    key, seed=self._seed, **self._kwargs
+                )
             return self._channels[key]
 
     # dict-style access used by the generated bundles (core.compile).

@@ -25,7 +25,7 @@ from typing import Mapping
 
 from repro.core.encoding import encode
 from repro.core.graph import DistributedWorkflowInstance
-from repro.core.optimizer import optimize
+from repro.core.optimizer import rewrite_system
 from repro.core.parser import dumps
 from repro.core.syntax import (
     Exec,
@@ -135,5 +135,5 @@ def rebalance(
     )
     w = encode(new_inst)
     if optimize_system:
-        w, _ = optimize(w)
+        w, _ = rewrite_system(w)
     return w

@@ -113,6 +113,12 @@ class Runtime:
         checkpoint_path: str | Path | None = None,
         heartbeat: HeartbeatMonitor | None = None,
     ):
+        from repro._compat import warn_legacy
+
+        warn_legacy(
+            "constructing repro.workflow.Runtime directly",
+            'swirl.trace(...).lower("inprocess").compile(step_fns)',
+        )
         self.state = system
         self.step_fns = dict(step_fns)
         self.payloads: dict[PayloadKey, Any] = dict(initial_payloads or {})

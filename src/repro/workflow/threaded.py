@@ -73,6 +73,12 @@ class ThreadedRuntime:
         channels: ChannelRegistry | None = None,
         timeout_s: float = 60.0,
     ):
+        from repro._compat import warn_legacy
+
+        warn_legacy(
+            "constructing repro.workflow.ThreadedRuntime directly",
+            'swirl.trace(...).lower("threaded").compile(step_fns)',
+        )
         self.bundles = dict(bundles)
         self.channels = channels or ChannelRegistry()
         self.timeout_s = timeout_s
@@ -195,8 +201,15 @@ class ThreadedRuntime:
         for th in threads:
             th.join(self.timeout_s)
             if th.is_alive():
+                # A peer's failure (e.g. a sender exhausting channel
+                # retries) leaves blocked receivers behind — report the
+                # root cause, not the stuck thread it orphaned.
+                self._raise_first_error()
                 raise TimeoutError("a location thread did not finish")
+        self._raise_first_error()
+        return self.data
+
+    def _raise_first_error(self) -> None:
         if self.errors:
             loc, err = self.errors[0]
             raise RuntimeError(f"location {loc} failed: {err!r}") from err
-        return self.data

@@ -1,0 +1,330 @@
+"""Staged-compilation API: trace → Plan → Lowered → Executable.
+
+Covers the full round trip on the quickstart DAG across all three in-tree
+backends (identical outputs), bisimilarity preservation of ``Plan.optimize``,
+the backend registry, checkpoint/restore, and the legacy deprecation shims.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import pytest
+
+from repro import swirl
+from repro.backends import (
+    UnknownBackendError,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.backends.base import (
+    Backend,
+    BackendCapabilityError,
+    ExecutionResult,
+)
+from repro.core import weak_barbed_bisimilar
+from repro.core.compile import StepMeta
+from repro.core.translate import DagTranslator
+
+BACKENDS = ("inprocess", "threaded", "jax")
+
+EDGES = {
+    "preprocess": ["train_a", "train_b"],
+    "train_a": ["evaluate"],
+    "train_b": ["evaluate"],
+    "evaluate": ["report"],
+    "report": [],
+}
+MAPPING = {
+    "preprocess": ("cpu0",),
+    "train_a": ("gpu0",),
+    "train_b": ("gpu1",),
+    "evaluate": ("gpu0",),
+    "report": ("cpu0",),
+}
+
+
+def quickstart_steps():
+    return {
+        "preprocess": lambda inp: {"d^preprocess": list(range(10))},
+        "train_a": lambda inp: {"d^train_a": sum(inp["d^preprocess"])},
+        "train_b": lambda inp: {"d^train_b": max(inp["d^preprocess"])},
+        "evaluate": lambda inp: {
+            "d^evaluate": inp["d^train_a"] + inp["d^train_b"]
+        },
+        "report": lambda inp: {},
+    }
+
+
+@pytest.fixture
+def plan():
+    return swirl.trace(EDGES, mapping=MAPPING).optimize()
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+
+class TestTrace:
+    def test_from_edges_requires_mapping(self):
+        with pytest.raises(TypeError, match="mapping"):
+            swirl.trace(EDGES)
+
+    def test_from_translator(self):
+        p = swirl.trace(DagTranslator(edges=EDGES, mapping=MAPPING))
+        assert p.instance is not None
+        assert set(p.steps()) == set(EDGES)
+
+    def test_from_instance(self):
+        inst = DagTranslator(edges=EDGES, mapping=MAPPING).instance()
+        p = swirl.trace(inst)
+        assert p.system.comm_count() > 0
+
+    def test_from_swirl_source_roundtrip(self, plan):
+        from repro.core.parser import dumps
+
+        p2 = swirl.trace(dumps(plan.system))
+        assert p2.system.canonical() == plan.system.canonical()
+
+    def test_from_swirl_file(self, plan, tmp_path):
+        from repro.core.parser import dumps
+
+        f = tmp_path / "plan.swirl"
+        f.write_text(dumps(plan.system))
+        p2 = swirl.trace(str(f))
+        assert p2.system.canonical() == plan.system.canonical()
+
+    def test_rejects_garbage(self):
+        with pytest.raises(TypeError):
+            swirl.trace(42)
+
+    def test_missing_swirl_file_is_an_error(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            swirl.trace(str(tmp_path / "nope.swirl"))
+
+    def test_pathlike_is_always_a_file(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            swirl.trace(tmp_path / "nope.txt")
+
+
+# ---------------------------------------------------------------------------
+# Plan.optimize / certify / explain
+# ---------------------------------------------------------------------------
+
+
+class TestPlan:
+    def test_optimize_removes_local_comms(self):
+        raw = swirl.trace(EDGES, mapping=MAPPING)
+        opt = raw.optimize()
+        assert opt.system.comm_count() < raw.system.comm_count()
+        assert opt.stats.removed > 0
+        assert opt.rewrites[0].rule == "R1R2"
+
+    def test_optimize_preserves_weak_barbed_bisimilarity(self):
+        raw = swirl.trace(EDGES, mapping=MAPPING)
+        opt = raw.optimize()
+        assert weak_barbed_bisimilar(raw.system, opt.system)
+
+    def test_certify_attaches_certificate(self):
+        plan = swirl.trace(EDGES, mapping=MAPPING).optimize(certify=True)
+        cert = plan.certificate
+        assert cert is not None and cert.equivalent
+        assert cert.states_optimized <= cert.states_original
+
+    def test_unknown_rule_rejected(self):
+        with pytest.raises(ValueError, match="unknown rewrite rule"):
+            swirl.trace(EDGES, mapping=MAPPING).optimize(rules=("R9",))
+
+    def test_explain_mentions_rewrites_and_placement(self, plan):
+        text = plan.explain()
+        assert "R1R2" in text
+        assert "train_a" in text and "gpu0" in text
+        assert "exec" in text  # the pretty-printed traces
+
+    def test_placement_typo_rejected(self, plan):
+        with pytest.raises(ValueError, match="unknown steps"):
+            plan.lower("inprocess", placement={"evalute": ("gpu1",)})
+
+    def test_placement_override_relowers(self, plan):
+        moved = plan.lower(
+            "inprocess", placement={"evaluate": ("gpu1",)}
+        )
+        assert moved.plan.placement()["evaluate"] == ("gpu1",)
+        result = moved.compile(quickstart_steps()).run()
+        assert result.payload("gpu1", "d^evaluate") == 54
+
+
+# ---------------------------------------------------------------------------
+# The full round trip, identical across backends
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_run(self, plan, backend):
+        result = plan.lower(backend).compile(quickstart_steps()).run()
+        assert result.backend == backend
+        assert result.payload("cpu0", "d^evaluate") == 54
+
+    def test_all_backends_identical(self, plan):
+        results = {
+            b: plan.lower(b).compile(quickstart_steps()).run()
+            for b in BACKENDS
+        }
+        datas = [r.data for r in results.values()]
+        assert datas[0] == datas[1] == datas[2]
+
+    def test_pipeline_emits_no_deprecation_warnings(self, plan):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            plan.lower("threaded").compile(quickstart_steps()).run()
+
+    def test_run_async(self, plan):
+        fut = plan.lower("inprocess").compile(quickstart_steps()).run_async()
+        assert fut.result(timeout=60).payload("cpu0", "d^evaluate") == 54
+
+    def test_missing_step_fn_rejected(self, plan):
+        steps = quickstart_steps()
+        del steps["evaluate"]
+        with pytest.raises(KeyError, match="evaluate"):
+            plan.lower("inprocess").compile(steps)
+
+    def test_step_meta_accepted(self, plan):
+        steps = {
+            name: StepMeta(fn=fn, expected_seconds=0.01)
+            for name, fn in quickstart_steps().items()
+        }
+        result = plan.lower("threaded").compile(steps).run()
+        assert result.payload("cpu0", "d^evaluate") == 54
+
+    def test_unknown_lowering_option_rejected(self, plan):
+        with pytest.raises(TypeError, match="unknown options"):
+            plan.lower("jax", warp_speed=True)
+
+    def test_channels_and_channel_options_conflict(self, plan):
+        from repro.workflow.channels import ChannelRegistry
+
+        exe = plan.lower(
+            "threaded", channels=ChannelRegistry(), seed=7
+        ).compile(quickstart_steps())
+        with pytest.raises(TypeError, match="not both"):
+            exe.run()
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / restore (inprocess capability)
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpoint:
+    def test_checkpoint_restore_roundtrip(self, plan):
+        exe = plan.lower("inprocess").compile(quickstart_steps())
+        first = exe.run()
+        ckpt = exe.checkpoint()
+        assert "preprocess" in ckpt.completed_execs
+
+        exe2 = plan.lower("inprocess").compile(quickstart_steps())
+        result = exe2.restore(ckpt).run()
+        assert result.data == first.data
+
+    def test_threaded_backend_lacks_checkpoint(self, plan):
+        exe = plan.lower("threaded").compile(quickstart_steps())
+        with pytest.raises(BackendCapabilityError):
+            exe.checkpoint()
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_builtins_available(self):
+        names = available_backends()
+        for b in BACKENDS:
+            assert b in names
+
+    def test_unknown_backend(self):
+        with pytest.raises(UnknownBackendError):
+            get_backend("nonexistent-backend")
+
+    def test_register_and_use_custom_backend(self, plan):
+        calls = {}
+
+        class EchoBackend(Backend):
+            name = "echo"
+
+            def compile(self, system, steps, options):
+                calls["compiled"] = True
+                return get_backend("inprocess").compile(
+                    system, steps, options
+                )
+
+        register_backend("echo-test", lambda: EchoBackend(), overwrite=True)
+        try:
+            result = (
+                plan.lower("echo-test").compile(quickstart_steps()).run()
+            )
+            assert calls["compiled"]
+            assert result.payload("cpu0", "d^evaluate") == 54
+        finally:
+            # keep the registry clean for other tests
+            from repro import backends as _b
+
+            _b._REGISTRY.pop("echo-test", None)
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError):
+            register_backend("inprocess", lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# Legacy deprecation shims
+# ---------------------------------------------------------------------------
+
+
+class TestDeprecationShims:
+    def test_translate_warns_but_works(self, plan):
+        with pytest.warns(DeprecationWarning, match="swirl.trace"):
+            w = DagTranslator(edges=EDGES, mapping=MAPPING).translate()
+        assert w.canonical() == swirl.trace(
+            EDGES, mapping=MAPPING
+        ).system.canonical()
+
+    def test_optimize_warns_and_matches_plan(self, plan):
+        from repro.core import optimize
+
+        w = swirl.trace(EDGES, mapping=MAPPING).system
+        with pytest.warns(DeprecationWarning, match="optimize"):
+            o, stats = optimize(w)
+        assert o.canonical() == plan.system.canonical()
+        assert stats.removed == plan.stats.removed
+
+    def test_compile_bundles_warns(self, plan):
+        from repro.core.compile import compile_bundles
+
+        with pytest.warns(DeprecationWarning, match="lower"):
+            bundles = compile_bundles(plan.system, quickstart_steps())
+        assert set(bundles) == set(plan.system.locations())
+
+    def test_runtime_warns_and_matches_staged_result(self, plan):
+        from repro.workflow import Runtime
+
+        with pytest.warns(DeprecationWarning, match="inprocess"):
+            rt = Runtime(plan.system, quickstart_steps())
+        rt.run()
+        staged = plan.lower("inprocess").compile(quickstart_steps()).run()
+        for loc in plan.system.locations():
+            assert rt.location_data(loc) == staged.location_data(loc)
+
+    def test_threaded_runtime_warns(self, plan):
+        from repro.core.compile import build_bundles
+        from repro.workflow import ThreadedRuntime
+
+        bundles = build_bundles(plan.system, quickstart_steps())
+        with pytest.warns(DeprecationWarning, match="threaded"):
+            rt = ThreadedRuntime(bundles)
+        data = rt.run()
+        assert data["cpu0"]["d^evaluate"] == 54

@@ -1,12 +1,11 @@
 """Theorem 1: ``W ≈ ⟦W⟧`` — weak barbed bisimulation, checked exactly on
 finite LTSs (paper examples + randomised instances)."""
 
-from hypothesis import given, settings
 
 from repro.core import encode, optimize, weak_barbed_bisimilar
 from repro.core.parser import parse_system
 
-from conftest import instances
+from conftest import given, instances, settings
 from test_graph import fig1_instance
 
 

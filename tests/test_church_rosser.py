@@ -7,12 +7,11 @@ either order reaches the same state (up to structural congruence).
 
 import random
 
-from hypothesis import given, settings
 
 from repro.core import encode
 from repro.core.semantics import apply_transition, enabled_transitions
 
-from conftest import instances
+from conftest import given, instances, settings
 
 
 def _residual(w, t_done, t_other):

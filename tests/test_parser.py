@@ -1,14 +1,13 @@
 """.swirl surface syntax: round-trips and error reporting."""
 
 import pytest
-from hypothesis import given, settings
 
 from repro.core import encode, optimize
 from repro.core.parser import SwirlSyntaxError, dumps, loads, parse_trace
 from repro.core.syntax import normalize
 from repro.core.translate import genomes_1000
 
-from conftest import instances
+from conftest import given, instances, settings
 
 
 def test_roundtrip_fig1():

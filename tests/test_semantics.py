@@ -3,7 +3,6 @@
 import random
 
 import pytest
-from hypothesis import given, settings
 
 from repro.core import encode, run
 from repro.core.parser import parse_system
@@ -16,7 +15,7 @@ from repro.core.semantics import (
 )
 from repro.core.syntax import congruent, normalize
 
-from conftest import instances
+from conftest import given, instances, settings
 from test_graph import fig1_instance
 
 

@@ -4,8 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import given, settings, st
 
 from repro.ckpt import async_save, latest_step, load_checkpoint, save_checkpoint
 from repro.data import ShardedLoader, SyntheticLM
