@@ -8,22 +8,32 @@ Prints ``name,value,unit,derived`` CSV rows.  Sections:
 * ``runtime``   — 1000 Genomes end-to-end on the decentralised runtime,
   optimised vs unoptimised plan (§6 experiment analogue: 10 locations,
   one chromosome/instance);
+* ``sched``     — cost-model-driven placement (repro.sched) vs round-robin
+  on the 1000 Genomes workflow under the two-rack network preset;
 * ``bisim``     — LTS sizes + exact bisimulation check time (Thm. 1);
 * ``kernels``   — Pallas kernels (interpret mode) vs jnp references;
 * ``train``     — SWIRL-planned trainer steps/s (smoke config);
 * ``roofline``  — re-prints the dry-run roofline summary if present.
 
-Usage: ``PYTHONPATH=src python -m benchmarks.run [section ...]``
+Usage: ``PYTHONPATH=src python -m benchmarks.run [section ...] [--json]``
+
+``--json`` additionally writes one ``BENCH_<section>.json`` per section —
+the CSV rows as a JSON list plus run metadata — so the perf trajectory is
+machine-trackable across PRs (CI uploads them as workflow artifacts).
 """
 
 from __future__ import annotations
 
 import json
+import platform
 import sys
 import time
 from pathlib import Path
 
 import numpy as np
+
+#: Rows of the section currently running (for --json); see main().
+_ROWS: list[dict[str, str]] = []
 
 
 def _t(fn, *args, repeat=3, **kw):
@@ -38,6 +48,9 @@ def _t(fn, *args, repeat=3, **kw):
 
 def row(name: str, value, unit: str, derived: str = "") -> None:
     print(f"{name},{value},{unit},{derived}")
+    _ROWS.append(
+        {"name": name, "value": str(value), "unit": unit, "derived": derived}
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +120,44 @@ def bench_runtime() -> None:
         row(
             f"runtime/genomes_{label}", f"{dt * 1e3:.1f}", "ms",
             f"messages={sent} comms_planned={plan.system.comm_count()}",
+        )
+
+
+def bench_sched() -> None:
+    from repro import swirl
+    from repro.core.translate import genomes_1000
+    from repro.sched import CostModel, NetworkModel, SizeModel
+
+    # Same payload scale as the runtime section (64k-float arrays).
+    inst = genomes_1000(n=8, m=6, a=2, b=2, c=2)
+    network = NetworkModel.preset("two-rack")
+    sizes = SizeModel(default_bytes=8 * 65536)
+    costs = CostModel(default_exec_s=2e-3)
+    plan = swirl.trace(inst).optimize()
+
+    for objective in ("makespan", "bytes"):
+        dt, sched = _t(
+            lambda: plan.schedule(
+                network, objective=objective, sizes=sizes, costs=costs
+            ),
+            repeat=1,
+        )
+        r = sched.schedule_report
+        row(
+            f"sched/genomes_{objective}_search", f"{dt * 1e3:.0f}", "ms",
+            f"steps={len(r.placement)} locations={len(inst.locations)}",
+        )
+        row(
+            f"sched/genomes_{objective}_bytes",
+            r.predicted.cross_bytes, "bytes",
+            f"round_robin={r.baseline.cross_bytes} "
+            f"saved={r.bytes_saved_frac * 100:.0f}%",
+        )
+        row(
+            f"sched/genomes_{objective}_makespan",
+            f"{r.predicted.makespan * 1e3:.2f}", "ms",
+            f"round_robin={r.baseline.makespan * 1e3:.2f}ms "
+            f"speedup={r.makespan_speedup:.2f}x",
         )
 
 
@@ -188,6 +239,7 @@ SECTIONS = {
     "encoding": bench_encoding,
     "optimise": bench_optimise,
     "runtime": bench_runtime,
+    "sched": bench_sched,
     "bisim": bench_bisim,
     "kernels": bench_kernels,
     "train": bench_train,
@@ -196,10 +248,34 @@ SECTIONS = {
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(SECTIONS)
+    args = sys.argv[1:]
+    emit_json = "--json" in args
+    which = [a for a in args if a != "--json"] or list(SECTIONS)
+    unknown = [name for name in which if name not in SECTIONS]
+    if unknown:
+        raise SystemExit(
+            f"unknown sections {unknown}; known: {list(SECTIONS)}"
+        )
     print("name,value,unit,derived")
     for name in which:
+        _ROWS.clear()
         SECTIONS[name]()
+        if emit_json:
+            out = Path(f"BENCH_{name}.json")
+            out.write_text(
+                json.dumps(
+                    {
+                        "section": name,
+                        "generated_unix": time.time(),
+                        "python": platform.python_version(),
+                        "platform": platform.platform(),
+                        "rows": list(_ROWS),
+                    },
+                    indent=2,
+                )
+                + "\n"
+            )
+            print(f"# wrote {out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

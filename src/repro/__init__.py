@@ -20,6 +20,7 @@ _SUBMODULES = (
     "api",
     "backends",
     "core",
+    "sched",
     "swirl",
     "workflow",
 )

@@ -51,6 +51,8 @@ from repro.core.optimizer import REWRITE_RULES, OptimizationStats
 from repro.core.parser import parse_system
 from repro.core.syntax import Exec, WorkflowSystem, actions
 from repro.core.translate import DagTranslator, SWIRLTranslator
+from repro.sched import CostModel, NetworkModel, SizeModel, auto_placement
+from repro.sched.report import ScheduleReport
 
 __all__ = [
     "trace",
@@ -60,7 +62,12 @@ __all__ = [
     "AppliedRewrite",
     "BisimCertificate",
     "ExecutionResult",
+    "ConcurrentRunError",
 ]
+
+
+class ConcurrentRunError(RuntimeError):
+    """A second run was started while the Executable was still running."""
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +168,7 @@ class Plan:
     origin: WorkflowSystem | None = None  # pre-optimisation system
     rewrites: tuple[AppliedRewrite, ...] = ()
     certificate: BisimCertificate | None = None
+    schedule_report: ScheduleReport | None = None
 
     # -- optimisation -------------------------------------------------------
     def optimize(
@@ -256,12 +264,82 @@ class Plan:
                     out[a.step] = tuple(sorted(a.locations))
         return out
 
+    # -- scheduling ---------------------------------------------------------
+    def schedule(
+        self,
+        network: NetworkModel | None = None,
+        *,
+        objective: str = "makespan",
+        steps: Mapping[str, StepFn | StepMeta] | None = None,
+        sizes: SizeModel | None = None,
+        costs: CostModel | None = None,
+        refine: bool = True,
+        pin: Sequence[str] = (),
+    ) -> "Plan":
+        """Choose ``M(s)`` against a network cost model (``repro.sched``).
+
+        Runs critical-path greedy placement plus local-search refinement,
+        re-encodes the instance under the chosen mapping, and re-runs the
+        optimiser (the recorded rewrite rules, or the paper's ``R1R2`` for
+        a never-optimised plan) — the scheduler co-locates producers with
+        consumers, which turns remote sends into local ones that R1 then
+        deletes.  ``objective`` is ``"makespan"`` (simulated completion
+        time; default) or ``"bytes"`` (cross-location traffic).
+
+        Size/cost estimates come from ``sizes=``/``costs=`` or are
+        harvested from ``steps=`` (the same registry handed to
+        :meth:`Lowered.compile` — :class:`StepMeta.output_bytes` and
+        :class:`StepMeta.expected_seconds`).  Spatially-constrained steps
+        (``|M(s)| > 1``) and steps named in ``pin=`` are never moved.
+
+        The result carries a :class:`~repro.sched.ScheduleReport`
+        (``plan.schedule_report``, rendered by :meth:`explain`) comparing
+        the chosen placement against round-robin.
+        """
+        if self.instance is None:
+            raise ValueError(
+                "schedule() needs a Plan traced from a front-end instance "
+                "(not raw .swirl text or a WorkflowSystem)"
+            )
+        metas = {
+            name: spec
+            for name, spec in (steps or {}).items()
+            if isinstance(spec, StepMeta)
+        }
+        if sizes is None:
+            sizes = SizeModel.from_step_metas(metas) if metas else SizeModel()
+        if costs is None:
+            costs = CostModel.from_step_metas(metas) if metas else CostModel()
+        # Re-run the optimiser on the scheduled plan: co-location turns
+        # remote sends into local ones that R1 deletes.  The same rule list
+        # is passed to the search so candidates are scored on exactly the
+        # system that will be lowered; a never-optimised plan gets the
+        # paper's default rule set.
+        rules = tuple(r.rule for r in self.rewrites) or ("R1R2",)
+        report = auto_placement(
+            self.instance,
+            network,
+            objective=objective,
+            sizes=sizes,
+            costs=costs,
+            refine=refine,
+            pin=pin,
+            rules=rules,
+        )
+        inst = replace(self.instance, mapping=dict(report.placement))
+        plan = Plan(
+            system=encode(inst), instance=inst, schedule_report=report
+        )
+        return plan.optimize(rules)
+
     # -- lowering -----------------------------------------------------------
     def lower(
         self,
         backend: str = "threaded",
         *,
-        placement: Mapping[str, Sequence[str]] | None = None,
+        placement: Mapping[str, Sequence[str]] | str | None = None,
+        network: NetworkModel | None = None,
+        objective: str = "makespan",
         **options: Any,
     ) -> "Lowered":
         """Select an execution backend (and optionally re-place steps).
@@ -269,11 +347,35 @@ class Plan:
         ``placement`` overrides the step→locations mapping ``M`` and
         re-derives the plan (re-encode + re-apply the recorded rewrites) —
         the Jaradat-style separation of plan construction from placement.
-        Backend-specific ``options`` (channel fault injection, retry
-        policies, device lists…) are validated here, before any execution.
+        ``placement="auto"`` instead runs the cost-model-driven scheduler
+        (:meth:`schedule`) against ``network=`` (default: the ``uniform``
+        preset) and ``objective=``.  Backend-specific ``options`` (channel
+        fault injection, retry policies, device lists…) are validated here,
+        before any execution; a schedule report, when present, is handed
+        down to every backend as the uniform ``schedule`` option.
         """
-        plan = self._replaced(placement) if placement else self
+        if isinstance(placement, str):
+            if placement != "auto":
+                raise ValueError(
+                    "placement must be a mapping or the string 'auto', "
+                    f"got {placement!r}"
+                )
+            plan = self.schedule(network, objective=objective)
+        else:
+            if network is not None or objective != "makespan":
+                raise TypeError(
+                    "network=/objective= are only meaningful with "
+                    "placement='auto' (or use Plan.schedule directly)"
+                )
+            plan = self._replaced(placement) if placement else self
         b = get_backend(backend)
+        if (
+            plan.schedule_report is not None
+            and "schedule" in b.known_options()
+        ):
+            # Uniform hand-down; skipped for backends whose known_options
+            # override predates (or deliberately excludes) the scheduler.
+            options.setdefault("schedule", plan.schedule_report)
         b.validate_options(options)
         return Lowered(plan=plan, backend_name=backend, options=dict(options))
 
@@ -339,6 +441,11 @@ class Plan:
                 f"  certificate: {c.method} equivalent={c.equivalent} "
                 f"({c.states_original} -> {c.states_optimized} states)"
             )
+        if self.schedule_report is not None:
+            lines.append("")
+            lines.append("-- schedule --")
+            for row in self.schedule_report.summary().splitlines():
+                lines.append(f"  {row}")
         lines.append("")
         lines.append("-- per-location traces --")
         lines.append(self.system.pretty())
@@ -394,18 +501,41 @@ class Lowered:
 
 @dataclass
 class Executable:
-    """A compiled workflow: run it (sync or async), snapshot it, resume it."""
+    """A compiled workflow: run it (sync or async), snapshot it, resume it.
+
+    One Executable owns one mutable :class:`BackendProgram`, so runs must
+    not overlap: a second :meth:`run`/:meth:`run_async` while one is in
+    flight raises :class:`ConcurrentRunError` (compile a second Executable
+    from the same :class:`Lowered` to run concurrently).
+    """
 
     plan: Plan
     backend_name: str
     program: BackendProgram
+    _run_lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
+    _running: bool = field(default=False, repr=False, compare=False)
 
     def run(
         self,
         *,
         initial_payloads: Mapping[PayloadKey, Any] | None = None,
     ) -> ExecutionResult:
-        return self.program.run(initial_payloads)
+        with self._run_lock:
+            if self._running:
+                raise ConcurrentRunError(
+                    f"this Executable ({self.backend_name!r}) is already "
+                    "running; overlapping runs would share one mutable "
+                    "BackendProgram — wait for the in-flight run, or "
+                    "compile() another Executable from the same Lowered"
+                )
+            self._running = True
+        try:
+            return self.program.run(initial_payloads)
+        finally:
+            with self._run_lock:
+                self._running = False
 
     def run_async(
         self,

@@ -116,4 +116,8 @@ class Backend(ABC):
             )
 
     def known_options(self) -> frozenset[str]:
-        return frozenset()
+        # "schedule" is the uniform hand-down of the placement scheduler's
+        # ScheduleReport (repro.sched): Plan.lower attaches it for every
+        # backend; backends may consult it (the jax backend groups rack
+        # members onto devices) or ignore it.
+        return frozenset({"schedule"})

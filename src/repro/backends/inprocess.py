@@ -36,6 +36,7 @@ class InprocessProgram(BackendProgram):
             if meta.expected_seconds is not None
         }
         kwargs = dict(self.options)
+        kwargs.pop("schedule", None)  # placement already baked into the system
         kwargs.setdefault("expected_s", expected or None)
         with suppress_deprecations():
             if self._pending_ckpt is not None:
@@ -80,7 +81,7 @@ class InprocessBackend(Backend):
     capabilities = frozenset({"checkpoint", "retry", "speculation"})
 
     def known_options(self) -> frozenset[str]:
-        return frozenset(
+        return super().known_options() | frozenset(
             {
                 "retry",
                 "speculation",

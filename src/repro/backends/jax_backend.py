@@ -49,6 +49,17 @@ class JaxMeshProgram(BackendProgram):
             platform = self.options.get("platform")
             devices = jax.devices(platform) if platform else jax.devices()
         locs = sorted(self.system.locations())
+        schedule = self.options.get("schedule")
+        if schedule is not None and getattr(schedule, "network", None):
+            # Placement scheduler hand-down: keep each network group's
+            # locations on one contiguous device block, so the cheap links
+            # of the cost model map to intra-device placement.
+            net = schedule.network
+            locs.sort(key=lambda l: (net.group_of(l) or "", l))
+            return {
+                loc: devices[i * len(devices) // len(locs)]
+                for i, loc in enumerate(locs)
+            }
         return {loc: devices[i % len(devices)] for i, loc in enumerate(locs)}
 
     def run(
@@ -146,7 +157,9 @@ class JaxBackend(Backend):
     capabilities = frozenset({"mesh", "device-placement"})
 
     def known_options(self) -> frozenset[str]:
-        return frozenset({"devices", "platform", "max_rounds"})
+        return super().known_options() | frozenset(
+            {"devices", "platform", "max_rounds"}
+        )
 
     def compile(
         self,

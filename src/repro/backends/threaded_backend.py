@@ -26,6 +26,7 @@ class ThreadedProgram(BackendProgram):
         from repro.workflow.threaded import ThreadedRuntime
 
         opts = dict(self.options)
+        opts.pop("schedule", None)  # placement already baked into the system
         registry = opts.pop("channels", None)
         channel_kwargs = {
             k: opts.pop(k)
@@ -63,7 +64,7 @@ class ThreadedBackend(Backend):
     capabilities = frozenset({"decentralised", "fault-injection"})
 
     def known_options(self) -> frozenset[str]:
-        return frozenset(
+        return super().known_options() | frozenset(
             {"channels", "drop_prob", "delay_s", "seed", "timeout_s"}
         )
 

@@ -53,6 +53,9 @@ class StepMeta:
     outputs: frozenset[str] = frozenset()
     # Scheduling hints used by the runtime's straggler mitigation:
     expected_seconds: float | None = None
+    # Declared byte-size per output datum, consumed by the placement
+    # scheduler's payload-size estimator (repro.sched.SizeModel):
+    output_bytes: Mapping[str, int] | None = None
 
 
 @dataclass(frozen=True)

@@ -17,6 +17,7 @@ toolchain does::
 from .api import (  # noqa: F401
     AppliedRewrite,
     BisimCertificate,
+    ConcurrentRunError,
     Executable,
     ExecutionResult,
     Lowered,
@@ -28,6 +29,13 @@ from .backends import (  # noqa: F401
     get_backend,
     register_backend,
 )
+from .sched import (  # noqa: F401
+    CostModel,
+    NetworkModel,
+    ScheduleReport,
+    SizeModel,
+    simulate,
+)
 
 __all__ = [
     "trace",
@@ -37,7 +45,13 @@ __all__ = [
     "ExecutionResult",
     "AppliedRewrite",
     "BisimCertificate",
+    "ConcurrentRunError",
     "register_backend",
     "get_backend",
     "available_backends",
+    "NetworkModel",
+    "SizeModel",
+    "CostModel",
+    "ScheduleReport",
+    "simulate",
 ]

@@ -214,11 +214,86 @@ class TestRoundTrip:
 
 
 # ---------------------------------------------------------------------------
-# Checkpoint / restore (inprocess capability)
+# Concurrent re-entry guard
 # ---------------------------------------------------------------------------
 
 
+class TestConcurrentRun:
+    @staticmethod
+    def _slow_steps(started, release):
+        steps = quickstart_steps()
+
+        def slow_preprocess(inp):
+            started.set()
+            release.wait(10)
+            return {"d^preprocess": list(range(10))}
+
+        steps["preprocess"] = slow_preprocess
+        return steps
+
+    def test_overlapping_run_raises(self, plan):
+        import threading
+
+        started, release = threading.Event(), threading.Event()
+        exe = plan.lower("inprocess").compile(
+            self._slow_steps(started, release)
+        )
+        fut = exe.run_async()
+        assert started.wait(10), "first run never started"
+        try:
+            with pytest.raises(swirl.ConcurrentRunError, match="already"):
+                exe.run()
+            with pytest.raises(swirl.ConcurrentRunError):
+                exe.run_async().result(timeout=10)
+        finally:
+            release.set()
+        assert fut.result(timeout=30).payload("cpu0", "d^evaluate") == 54
+        # The guard clears once the in-flight run finishes.
+        assert exe.run().payload("cpu0", "d^evaluate") == 54
+
+    def test_guard_clears_after_failure(self, plan):
+        steps = quickstart_steps()
+        steps["evaluate"] = lambda inp: (_ for _ in ()).throw(
+            RuntimeError("boom")
+        )
+        exe = plan.lower("inprocess").compile(steps)
+        with pytest.raises(Exception, match="failed"):
+            exe.run()
+        exe2 = plan.lower("inprocess").compile(quickstart_steps())
+        assert not exe._running
+        assert exe2.run().payload("cpu0", "d^evaluate") == 54
+
+    def test_distinct_executables_may_overlap(self, plan):
+        import threading
+
+        started, release = threading.Event(), threading.Event()
+        lowered = plan.lower("inprocess")
+        exe1 = lowered.compile(self._slow_steps(started, release))
+        exe2 = lowered.compile(quickstart_steps())
+        fut = exe1.run_async()
+        assert started.wait(10)
+        try:
+            assert exe2.run().payload("cpu0", "d^evaluate") == 54
+        finally:
+            release.set()
+        assert fut.result(timeout=30).payload("cpu0", "d^evaluate") == 54
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / restore — every backend advertising the capability
+# ---------------------------------------------------------------------------
+
+CHECKPOINT_BACKENDS = [
+    name
+    for name in available_backends()
+    if "checkpoint" in get_backend(name).capabilities
+]
+
+
 class TestCheckpoint:
+    def test_inprocess_advertises_checkpoint(self):
+        assert "inprocess" in CHECKPOINT_BACKENDS
+
     def test_checkpoint_restore_roundtrip(self, plan):
         exe = plan.lower("inprocess").compile(quickstart_steps())
         first = exe.run()
@@ -228,6 +303,35 @@ class TestCheckpoint:
         exe2 = plan.lower("inprocess").compile(quickstart_steps())
         result = exe2.restore(ckpt).run()
         assert result.data == first.data
+
+    @pytest.mark.parametrize("backend", CHECKPOINT_BACKENDS)
+    def test_capability_roundtrip_after_run(self, plan, backend):
+        """Post-run snapshot restores to the same final data everywhere."""
+        exe = plan.lower(backend).compile(quickstart_steps())
+        done = exe.run()
+        ckpt = exe.checkpoint()
+        restored = (
+            plan.lower(backend)
+            .compile(quickstart_steps())
+            .restore(ckpt)
+            .run()
+        )
+        assert restored.data == done.data
+        assert restored.backend == backend
+
+    @pytest.mark.parametrize("backend", CHECKPOINT_BACKENDS)
+    def test_capability_roundtrip_pristine(self, plan, backend):
+        """A pre-run snapshot restores to a full from-scratch run."""
+        exe = plan.lower(backend).compile(quickstart_steps())
+        pristine = exe.checkpoint()
+        direct = plan.lower(backend).compile(quickstart_steps()).run()
+        restored = (
+            plan.lower(backend)
+            .compile(quickstart_steps())
+            .restore(pristine)
+            .run()
+        )
+        assert restored.data == direct.data
 
     def test_threaded_backend_lacks_checkpoint(self, plan):
         exe = plan.lower("threaded").compile(quickstart_steps())
