@@ -8,6 +8,8 @@ Prints ``name,value,unit,derived`` CSV rows.  Sections:
 * ``runtime``   — 1000 Genomes end-to-end on the decentralised runtime,
   optimised vs unoptimised plan (§6 experiment analogue: 10 locations,
   one chromosome/instance);
+* ``dist``      — 1000 Genomes wall-clock, threaded vs the multiprocess
+  backend (real OS processes over the ack-based socket transport);
 * ``sched``     — cost-model-driven placement (repro.sched) vs round-robin
   on the 1000 Genomes workflow under the two-rack network preset;
 * ``bisim``     — LTS sizes + exact bisimulation check time (Thm. 1);
@@ -120,6 +122,60 @@ def bench_runtime() -> None:
         row(
             f"runtime/genomes_{label}", f"{dt * 1e3:.1f}", "ms",
             f"messages={sent} comms_planned={plan.system.comm_count()}",
+        )
+
+
+def bench_dist() -> None:
+    """Threaded (one process, queues) vs multiprocess (real OS processes,
+    ack-based sockets) wall-clock on the 1000 Genomes workflow."""
+    from repro import swirl
+    from repro.core.translate import genomes_1000
+
+    inst = genomes_1000(n=4, m=3, a=2, b=2, c=2)
+    rng = np.random.default_rng(0)
+    init = {("l^d", d): rng.random(65536) for d in inst.g("l^d")}
+
+    def fns():
+        out = {}
+        for s in inst.workflow.steps:
+            outs = inst.out_data(s)
+            if s == "s0":
+                out[s] = lambda i, outs=outs: {o: init[("l^d", o)] for o in outs}
+            else:
+                out[s] = lambda i, outs=outs: {
+                    o: sum(np.sum(np.asarray(v)) for v in i.values())
+                    * np.ones(65536)
+                    for o in outs
+                }
+        return out
+
+    plan = swirl.trace(inst).optimize()
+    n_locs = len(inst.locations)
+    cases = [
+        ("threaded", {"timeout_s": 120}, "in-process threads"),
+        ("multiprocess", {"timeout_s": 240}, f"{n_locs} worker processes"),
+        (
+            "multiprocess",
+            {"timeout_s": 240, "workers": 2},
+            "packed onto 2 worker processes",
+        ),
+    ]
+    for backend, options, label in cases:
+        lowered = plan.lower(backend, **options)
+
+        def drive(lowered=lowered):
+            return lowered.compile(fns()).run(initial_payloads=dict(init))
+
+        dt, result = _t(drive, repeat=2)
+        workers = (
+            result.stats.get("workers", 1)
+            if isinstance(result.stats, dict)
+            else 1
+        )
+        name = backend + (f"_w{options.get('workers')}" if "workers" in options else "")
+        row(
+            f"dist/genomes_{name}", f"{dt * 1e3:.1f}", "ms",
+            f"{label}; locations={n_locs} workers={workers}",
         )
 
 
@@ -239,6 +295,7 @@ SECTIONS = {
     "encoding": bench_encoding,
     "optimise": bench_optimise,
     "runtime": bench_runtime,
+    "dist": bench_dist,
     "sched": bench_sched,
     "bisim": bench_bisim,
     "kernels": bench_kernels,

@@ -3,8 +3,9 @@
 ``swirl.trace`` encodes the DAG into a SWIRL plan, ``.optimize()`` applies
 the paper's rewriting rules (with a machine-checked bisimulation
 certificate), ``.lower(backend)`` picks an execution target by name, and
-``.compile(steps).run()`` executes it.  The same plan runs on all three
-in-tree backends with identical results.
+``.compile(steps).run()`` executes it.  The same plan runs on all four
+in-tree backends with identical results — including ``multiprocess``,
+which gives every location its own OS process.
 
 Run: ``PYTHONPATH=src python examples/quickstart.py``
 """
@@ -45,7 +46,7 @@ step_fns = {
     "report": lambda inp: {},
 }
 
-for backend in ("inprocess", "threaded", "jax"):
+for backend in ("inprocess", "threaded", "multiprocess", "jax"):
     result = plan.lower(backend).compile(step_fns).run()
     score = result.payload("cpu0", "d^evaluate")
     print(f"{backend:>10}: score = {score}")

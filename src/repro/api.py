@@ -27,7 +27,11 @@ different rule sets, lowered to several backends, explained
 weak-barbed-bisimulation checker of :mod:`repro.core.bisim` (Thm. 1).
 
 Backends resolve by name through :mod:`repro.backends`; ``inprocess``,
-``threaded`` and ``jax`` ship in-tree.
+``threaded``, ``multiprocess`` and ``jax`` ship in-tree.  The
+``multiprocess`` backend runs every location (group) in its own OS process
+over the pluggable transport layer of :mod:`repro.workflow.transport` —
+``Plan.lower("multiprocess", workers=..., transport=...)`` selects the
+process count and the wire.
 """
 
 from __future__ import annotations
@@ -350,9 +354,12 @@ class Plan:
         ``placement="auto"`` instead runs the cost-model-driven scheduler
         (:meth:`schedule`) against ``network=`` (default: the ``uniform``
         preset) and ``objective=``.  Backend-specific ``options`` (channel
-        fault injection, retry policies, device lists…) are validated here,
-        before any execution; a schedule report, when present, is handed
-        down to every backend as the uniform ``schedule`` option.
+        fault injection, retry policies, device lists, the ``multiprocess``
+        backend's ``workers=``/``transport=``/``start_method=``…) are
+        validated here, before any execution; a schedule report, when
+        present, is handed down to every backend as the uniform
+        ``schedule`` option (the multiprocess backend pins each network
+        group's locations to one worker process).
         """
         if isinstance(placement, str):
             if placement != "auto":

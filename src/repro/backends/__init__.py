@@ -1,8 +1,8 @@
 """Pluggable backend registry for the staged-compilation pipeline.
 
-``Plan.lower(backend="...")`` resolves names through this registry.  Three
-backends are built in (``inprocess``, ``threaded``, ``jax``); third parties
-add their own either programmatically::
+``Plan.lower(backend="...")`` resolves names through this registry.  Four
+backends are built in (``inprocess``, ``threaded``, ``multiprocess``,
+``jax``); third parties add their own either programmatically::
 
     from repro.backends import register_backend
     register_backend("mycluster", MyClusterBackend)
@@ -28,6 +28,7 @@ from .base import (
     ExecutionResult,
     UnknownBackendError,
 )
+from .multiprocess import WorkerFailedError
 
 __all__ = [
     "Backend",
@@ -35,6 +36,7 @@ __all__ = [
     "BackendCapabilityError",
     "ExecutionResult",
     "UnknownBackendError",
+    "WorkerFailedError",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -59,6 +61,7 @@ _REGISTRY.update(
     {
         "inprocess": _builtin("repro.backends.inprocess"),
         "threaded": _builtin("repro.backends.threaded_backend"),
+        "multiprocess": _builtin("repro.backends.multiprocess"),
         "jax": _builtin("repro.backends.jax_backend"),
     }
 )

@@ -2,14 +2,18 @@
 
 A backend turns an (optimised) :class:`~repro.core.syntax.WorkflowSystem`
 plus a step registry into a :class:`BackendProgram` — the backend-specific
-compiled artifact behind :class:`repro.api.Executable`.  Three backends ship
+compiled artifact behind :class:`repro.api.Executable`.  Four backends ship
 in-tree (see :mod:`repro.backends`):
 
 ======================  =====================================================
 ``inprocess``           reduction-driven :class:`repro.workflow.Runtime`
                         (checkpointable, retry/speculation fault tolerance)
-``threaded``            decentralised per-location threads over channels
+``threaded``            decentralised per-location threads over the
+                        in-memory transport
                         (:class:`repro.workflow.ThreadedRuntime`)
+``multiprocess``        one OS process per location group over the ack-based
+                        socket transport; checkpointable, typed
+                        ``WorkerFailedError`` on worker death
 ``jax``                 per-location lowering onto a JAX host device mesh;
                         array payloads are staged with ``jax.device_put``
 ======================  =====================================================

@@ -1,0 +1,632 @@
+"""``multiprocess`` backend — one OS process per SWIRL location (group).
+
+This is the paper's deployment model made real inside one machine: every
+location's compiled bundle runs in its *own operating-system process* and
+COMM messages cross a genuine transport boundary (the ``socket`` transport
+of :mod:`repro.workflow.transport` — ``multiprocessing.connection`` sockets
+with pickle framing, per-message acks, and resend on ack timeout).  There
+is no shared memory between locations: everything a location learns, it
+learns through its trace's recvs, exactly like the generated TCP bundles.
+
+Topology
+--------
+A lightweight coordinator (the calling process) spawns one worker process
+per *location group* and never touches payload routing — data flows
+worker-to-worker.  Groups exist for two reasons:
+
+* **spatial constraints** — a step with ``|M(s)| > 1`` synchronises through
+  an in-process exec barrier, so its locations must share a process;
+* **schedule pinning** — when a :class:`repro.sched.ScheduleReport` is
+  handed down (``Plan.lower(..., placement="auto")``), locations in the
+  same network group are pinned to the same worker process, mirroring the
+  cost model's "cheap intra-rack links" assumption; an explicit
+  ``workers=N`` option additionally packs groups onto ``N`` processes.
+
+Fault surface
+-------------
+A worker that raises or dies (``SIGKILL`` included) is surfaced as a typed
+:class:`WorkerFailedError` carrying the failed location and the step it was
+executing; all sibling workers are torn down before the error propagates,
+so no orphan processes remain.
+
+Checkpointing
+-------------
+Workers stream per-step output deltas to the coordinator, which merges them
+into a global payload store; :meth:`MultiprocessProgram.checkpoint` snapshots
+that store as a standard :class:`repro.workflow.runtime.Checkpoint` (the
+store is consistent mid-run because SWIRL payloads are immutable and the
+completed-exec set only grows).  ``restore`` seeds the next run with the
+snapshot: completed steps replay their recorded outputs instead of
+re-executing, and the at-least-once transport makes the replayed sends
+harmless.
+
+Requirements: the default start method is ``fork`` (closures and lambdas
+work as step functions); with ``start_method="spawn"`` every step function
+and payload must be picklable.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import shutil
+import signal
+import tempfile
+import threading
+import time
+import warnings
+from dataclasses import replace
+from typing import Any, Mapping, Sequence
+
+from repro.core.compile import StepMeta, build_bundles
+from repro.core.parser import dumps
+from repro.core.syntax import Exec, WorkflowSystem, actions
+
+from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
+
+DEFAULT_TIMEOUT_S = 120.0
+
+
+class WorkerFailedError(RuntimeError):
+    """A worker process crashed or raised while executing its locations.
+
+    ``location`` names the failed location, ``step`` the step it was
+    executing when it died (``None`` if it failed outside a step, e.g.
+    while waiting on a recv).
+    """
+
+    def __init__(
+        self,
+        location: str | None,
+        step: str | None = None,
+        *,
+        worker_id: int | None = None,
+        exitcode: int | None = None,
+        reason: str = "",
+    ):
+        self.location = location
+        self.step = step
+        self.worker_id = worker_id
+        self.exitcode = exitcode
+        self.reason = reason
+        at = f" in step {step!r}" if step else ""
+        why = reason or (
+            f"killed (exit code {exitcode})"
+            if exitcode is not None
+            else "crashed"
+        )
+        super().__init__(
+            f"worker for location {location!r} failed{at}: {why}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Location → worker-process assignment
+# ---------------------------------------------------------------------------
+
+
+def assign_workers(
+    system: WorkflowSystem,
+    *,
+    workers: int | None = None,
+    schedule: Any = None,
+) -> list[tuple[str, ...]]:
+    """Group locations into worker processes (deterministically).
+
+    Locations sharing a spatially-constrained step (``|M(s)| > 1``) are
+    always co-resident (the exec barrier is in-process).  When a
+    ``ScheduleReport`` is given, locations in the same network group are
+    pinned together.  ``workers=N`` then packs the groups onto ``N``
+    processes, largest-first onto the least-loaded process.
+    """
+    locs = sorted(system.locations())
+    parent = {l: l for l in locs}
+
+    def find(x: str) -> str:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a: str, b: str) -> None:
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            # Deterministic root: keep the lexicographically smaller.
+            lo, hi = sorted((ra, rb))
+            parent[hi] = lo
+
+    for cfg in system.configs:
+        for a in actions(cfg.trace):
+            if isinstance(a, Exec) and len(a.locations) > 1:
+                first, *rest = sorted(a.locations)
+                for other in rest:
+                    union(first, other)
+
+    network = getattr(schedule, "network", None)
+    if network is not None:
+        by_group: dict[str, list[str]] = {}
+        for l in locs:
+            g = network.group_of(l)
+            if g is not None:
+                by_group.setdefault(g, []).append(l)
+        for members in by_group.values():
+            first, *rest = members
+            for other in rest:
+                union(first, other)
+
+    units: dict[str, list[str]] = {}
+    for l in locs:
+        units.setdefault(find(l), []).append(l)
+    groups = sorted(tuple(sorted(v)) for v in units.values())
+    if workers is None or workers >= len(groups):
+        return groups
+    if workers < 1:
+        raise ValueError(f"workers must be >= 1, got {workers}")
+    bins: list[list[str]] = [[] for _ in range(workers)]
+    sizes = [0] * workers
+    for unit in sorted(groups, key=lambda u: (-len(u), u)):
+        i = min(range(workers), key=lambda j: (sizes[j], j))
+        bins[i].extend(unit)
+        sizes[i] += len(unit)
+    return sorted(tuple(sorted(b)) for b in bins if b)
+
+
+def _recorded_outputs(system: WorkflowSystem, ckpt: Any) -> dict[str, dict]:
+    """Per-step output payloads recoverable from a checkpoint's store."""
+    recorded: dict[str, dict] = {}
+    payloads: Mapping[PayloadKey, Any] = ckpt.payloads
+    for cfg in system.configs:
+        for a in actions(cfg.trace):
+            if not isinstance(a, Exec) or a.step in recorded:
+                continue
+            if a.step not in ckpt.completed_execs:
+                continue
+            out, missing = {}, False
+            for d in a.outputs:
+                for l in sorted(a.locations):
+                    if (l, d) in payloads:
+                        out[d] = payloads[(l, d)]
+                        break
+                else:
+                    # The datum may only survive where a comm moved it.
+                    hit = next(
+                        (v for (l, dd), v in payloads.items() if dd == d),
+                        _MISSING,
+                    )
+                    if hit is _MISSING:
+                        missing = True
+                        break
+                    out[d] = hit
+            if not missing:
+                recorded[a.step] = out
+    return recorded
+
+
+_MISSING = object()
+
+
+# ---------------------------------------------------------------------------
+# Worker process
+# ---------------------------------------------------------------------------
+
+
+def _worker_main(cfg: dict) -> None:
+    """Entry point of one worker: run my locations' bundles to completion.
+
+    Control-plane protocol (worker → coordinator over the duplex pipe):
+    ``("ready", wid, pid)`` → *waits for* ``("go",)`` → then any number of
+    ``("exec", wid, loc, step)`` / ``("delta", loc, step, outputs)`` /
+    finally one of ``("done", wid, data)`` or
+    ``("error", wid, loc, step, reason)``.
+    """
+    ctl = cfg["ctl"]
+    wid = cfg["worker_id"]
+    transport = None
+    ctl_lock = threading.Lock()
+
+    def tell(msg: tuple) -> None:
+        with ctl_lock:
+            try:
+                ctl.send(msg)
+            except (OSError, BrokenPipeError, ValueError):
+                pass  # coordinator is gone; nothing left to report to
+
+    try:
+        from repro._compat import suppress_deprecations
+        from repro.workflow.threaded import ThreadedRuntime
+        from repro.workflow.transport import HybridTransport, get_transport
+
+        transport_cls = get_transport(cfg["transport"])
+        transport = transport_cls(
+            cfg["addresses"],
+            serve=cfg["locations"],
+            authkey=cfg["authkey"],
+            ack_timeout=cfg["ack_timeout"],
+            connect_timeout=cfg["timeout_s"],
+        )
+        if len(cfg["locations"]) > 1:
+            # Co-resident locations (schedule pinning / workers= packing)
+            # talk in memory instead of through socket loopback.
+            transport = HybridTransport(transport, cfg["locations"])
+        tell(("ready", wid, os.getpid()))
+        if ctl.recv() != ("go",):  # coordinator aborted startup
+            return
+
+        system: WorkflowSystem = cfg["system"]
+        metas: Mapping[str, StepMeta] = cfg["steps"]
+        completed: frozenset[str] = cfg["completed"]
+        recorded: Mapping[str, dict] = cfg["recorded"]
+        kill_at = cfg.get("kill_at_step")
+        current: dict[str, str] = {}
+
+        def wrap(loc: str, step: str, fn):
+            def run(inputs, _loc=loc, _step=step, _fn=fn):
+                current[_loc] = _step
+                tell(("exec", wid, _loc, _step))
+                if kill_at is not None and _step == kill_at:
+                    os.kill(os.getpid(), signal.SIGKILL)  # fault injection
+                if _step in completed and _step in recorded:
+                    out = dict(recorded[_step])  # resume: replay, don't redo
+                else:
+                    try:
+                        out = dict(_fn(inputs))
+                    except BaseException as e:  # noqa: BLE001
+                        tell(
+                            (
+                                "error",
+                                wid,
+                                _loc,
+                                _step,
+                                f"{type(e).__name__}: {e}",
+                            )
+                        )
+                        raise
+                tell(("delta", _loc, _step, dict(out)))
+                current.pop(_loc, None)
+                return out
+
+            return run
+
+        step_fns = {name: meta.fn for name, meta in metas.items()}
+        bundles = build_bundles(system, step_fns, step_meta=dict(metas))
+        mine = {loc: bundles[loc] for loc in cfg["locations"]}
+        for loc, bundle in mine.items():
+            bundle.steps = {
+                s: replace(m, fn=wrap(loc, s, m.fn))
+                for s, m in bundle.steps.items()
+            }
+        init = {
+            (l, d): v for (l, d), v in cfg["initial"].items() if l in mine
+        }
+        with suppress_deprecations():
+            rt = ThreadedRuntime(
+                mine,
+                initial_payloads=init,
+                transport=transport,
+                timeout_s=cfg["timeout_s"],
+            )
+            try:
+                data = rt.run()
+            except BaseException as e:  # noqa: BLE001
+                loc, err = (rt.errors or [(cfg["locations"][0], e)])[0]
+                tell(
+                    (
+                        "error",
+                        wid,
+                        loc,
+                        current.get(loc),
+                        f"{type(err).__name__}: {err}",
+                    )
+                )
+                return
+        tell(("done", wid, {l: dict(d) for l, d in data.items()}))
+    except BaseException as e:  # noqa: BLE001
+        loc = cfg["locations"][0] if cfg["locations"] else None
+        tell(("error", wid, loc, None, f"{type(e).__name__}: {e}"))
+    finally:
+        if transport is not None:
+            transport.close()
+
+
+# ---------------------------------------------------------------------------
+# Coordinator
+# ---------------------------------------------------------------------------
+
+
+class MultiprocessProgram(BackendProgram):
+    # un-annotated → plain class attributes, not dataclass fields
+    _store = None  # merged (location, datum) -> payload
+    _completed = None  # set of completed step names
+    _pending_ckpt = None
+    last_pids = {}  # worker id -> OS pid of the last run (never mutated)
+
+    def run(
+        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
+    ) -> ExecutionResult:
+        from multiprocessing import connection as mpc
+
+        from repro.workflow.transport import get_transport, socket_addresses
+
+        opts = dict(self.options)
+        schedule = opts.pop("schedule", None)
+        workers = opts.pop("workers", None)
+        transport_name = opts.pop("transport", "socket")
+        start_method = opts.pop("start_method", None)
+        timeout_s = float(opts.pop("timeout_s", DEFAULT_TIMEOUT_S))
+        ack_timeout = float(opts.pop("ack_timeout", 1.0))
+        kill_at = opts.pop("_kill_at_step", None)
+
+        transport_cls = get_transport(transport_name)
+        if not getattr(transport_cls, "crosses_processes", False):
+            raise ValueError(
+                f"transport {transport_name!r} cannot cross process "
+                "boundaries; the multiprocess backend needs one that can "
+                '(e.g. "socket")'
+            )
+        if start_method is None:
+            start_method = (
+                "fork"
+                if "fork" in mp.get_all_start_methods()
+                else "spawn"
+            )
+
+        completed: set[str] = set()
+        recorded: dict[str, dict] = {}
+        store: dict[PayloadKey, Any] = {}
+        if self._pending_ckpt is not None:
+            ckpt, self._pending_ckpt = self._pending_ckpt, None
+            store.update(ckpt.payloads)
+            completed |= set(ckpt.completed_execs)
+            recorded = _recorded_outputs(self.system, ckpt)
+        if initial_payloads:
+            store.update(initial_payloads)
+        self._store, self._completed = store, completed
+
+        groups = assign_workers(
+            self.system, workers=workers, schedule=schedule
+        )
+        ctx = mp.get_context(start_method)
+        tmpdir = tempfile.mkdtemp(prefix="swirl-mp-")
+        addresses = socket_addresses(
+            self.system.locations(), base_dir=tmpdir
+        )
+        authkey = os.urandom(16)
+
+        procs: list = []
+        parent_conns: list = []
+        pids: dict[int, int] = {}
+        last_exec: dict[int, tuple[str, str]] = {}
+        finals: dict[int, dict[str, dict[str, Any]]] = {}
+        failure: tuple | None = None
+
+        def handle(msg: tuple, wid: int) -> tuple | None:
+            """Apply one worker message; return a failure record or None."""
+            nonlocal started
+            kind = msg[0]
+            if kind == "ready":
+                ready.add(wid)
+                pids[wid] = msg[2]
+                if not started and len(ready) == len(procs):
+                    started = True
+                    for c in list(live_conns):
+                        try:
+                            c.send(("go",))
+                        except (OSError, BrokenPipeError):
+                            pass
+            elif kind == "exec":
+                last_exec[wid] = (msg[2], msg[3])
+            elif kind == "delta":
+                _, loc, step, out = msg
+                for d, v in out.items():
+                    store[(loc, d)] = v
+                completed.add(step)
+                if last_exec.get(wid) == (loc, step):
+                    # The step finished — a later crash while e.g. blocked
+                    # on a recv must not be pinned on it (step=None then).
+                    del last_exec[wid]
+            elif kind == "done":
+                finals[wid] = msg[2]
+                pending.discard(wid)
+            elif kind == "error":
+                return ("error", wid, msg[2], msg[3], msg[4])
+            return None
+
+        def drain(conn, wid: int) -> tuple | None:
+            """Consume every buffered message on one control pipe."""
+            first_failure = None
+            while True:
+                try:
+                    if not conn.poll(0):
+                        break
+                    msg = conn.recv()
+                except (EOFError, OSError):
+                    live_conns.pop(conn, None)
+                    break
+                err = handle(msg, wid)
+                if err is not None and first_failure is None:
+                    first_failure = err
+            return first_failure
+
+        try:
+            for wid, group in enumerate(groups):
+                parent, child = ctx.Pipe()
+                cfg = dict(
+                    worker_id=wid,
+                    locations=group,
+                    system=self.system,
+                    steps=dict(self.steps),
+                    addresses=addresses,
+                    authkey=authkey,
+                    transport=transport_name,
+                    ctl=child,
+                    initial={
+                        k: v for k, v in store.items() if k[0] in group
+                    },
+                    completed=frozenset(completed),
+                    recorded=recorded,
+                    timeout_s=timeout_s,
+                    ack_timeout=ack_timeout,
+                    kill_at_step=kill_at,
+                )
+                proc = ctx.Process(
+                    target=_worker_main,
+                    args=(cfg,),
+                    name=f"swirl-worker-{wid}",
+                    daemon=True,
+                )
+                with warnings.catch_warnings():
+                    # Forking a process that imported a multithreaded
+                    # library (jax) warns; workers only run pure Python.
+                    warnings.simplefilter("ignore")
+                    proc.start()
+                child.close()
+                procs.append(proc)
+                parent_conns.append(parent)
+
+            ready: set[int] = set()
+            started = False
+            pending = set(range(len(procs)))
+            live_conns = {parent_conns[i]: i for i in range(len(procs))}
+            sentinels = {procs[i].sentinel: i for i in range(len(procs))}
+            deadline = time.monotonic() + timeout_s
+
+            while pending and failure is None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    failure = ("timeout",)
+                    break
+                objs = list(live_conns) + [
+                    procs[i].sentinel for i in pending
+                ]
+                for obj in mpc.wait(objs, timeout=remaining):
+                    if obj in live_conns:
+                        wid = live_conns[obj]
+                        try:
+                            msg = obj.recv()
+                        except (EOFError, OSError):
+                            del live_conns[obj]
+                            continue
+                        failure = handle(msg, wid) or failure
+                        if failure is not None:
+                            break
+                    else:
+                        wid = sentinels.get(obj)
+                        if wid is None or wid not in pending:
+                            continue
+                        # Harvest everything already in flight (deltas,
+                        # done/error reports) before declaring a crash.
+                        for conn in list(live_conns):
+                            failure = (
+                                failure or drain(conn, live_conns[conn])
+                            )
+                        if wid in pending and failure is None:
+                            loc, step = last_exec.get(
+                                wid, (groups[wid][0], None)
+                            )
+                            failure = (
+                                "crash",
+                                wid,
+                                loc,
+                                step,
+                                procs[wid].exitcode,
+                            )
+                        break
+        finally:
+            for proc in procs:
+                if proc.is_alive():
+                    proc.terminate()
+            for proc in procs:
+                proc.join(5)
+                if proc.is_alive():
+                    proc.kill()
+                    proc.join(5)
+            for conn in parent_conns:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            shutil.rmtree(tmpdir, ignore_errors=True)
+            self.last_pids = dict(pids)
+
+        if failure is not None:
+            if failure[0] == "timeout":
+                raise TimeoutError(
+                    f"multiprocess run exceeded {timeout_s}s; "
+                    "workers terminated"
+                )
+            kind, wid, loc, step, info = failure
+            raise WorkerFailedError(
+                loc,
+                step,
+                worker_id=wid,
+                exitcode=info if kind == "crash" else None,
+                reason=info if kind == "error" else "",
+            )
+
+        data: dict[str, dict[str, Any]] = {
+            loc: {} for loc in self.system.locations()
+        }
+        for wid in sorted(finals):
+            for loc, local in finals[wid].items():
+                data[loc].update(local)
+                for d, v in local.items():
+                    store[(loc, d)] = v
+        return ExecutionResult(
+            backend="multiprocess",
+            data=data,
+            stats={
+                "workers": len(groups),
+                "groups": {i: list(g) for i, g in enumerate(groups)},
+                "pids": dict(pids),
+                "transport": transport_name,
+                "start_method": start_method,
+            },
+        )
+
+    # -- checkpoint capability ----------------------------------------------
+
+    def checkpoint(self):
+        """Snapshot the coordinator's merged store (consistent mid-run)."""
+        from repro.workflow.runtime import Checkpoint
+
+        return Checkpoint(
+            system_text=dumps(self.system),
+            payloads=dict(self._store or {}),
+            completed_execs=frozenset(self._completed or ()),
+        )
+
+    def restore(self, ckpt) -> None:
+        self._pending_ckpt = ckpt
+
+
+class MultiprocessBackend(Backend):
+    name = "multiprocess"
+    capabilities = frozenset(
+        {"checkpoint", "distributed", "fault-injection"}
+    )
+
+    def known_options(self) -> frozenset[str]:
+        return super().known_options() | frozenset(
+            {
+                "workers",
+                "transport",
+                "start_method",
+                "timeout_s",
+                "ack_timeout",
+                "_kill_at_step",
+            }
+        )
+
+    def compile(
+        self,
+        system: WorkflowSystem,
+        steps: Mapping[str, StepMeta],
+        options: Mapping[str, Any],
+    ) -> MultiprocessProgram:
+        return MultiprocessProgram(
+            system=system, steps=dict(steps), options=dict(options)
+        )
+
+
+def factory() -> Backend:
+    return MultiprocessBackend()

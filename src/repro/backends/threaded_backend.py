@@ -24,22 +24,38 @@ class ThreadedProgram(BackendProgram):
     ) -> ExecutionResult:
         from repro.workflow.channels import ChannelRegistry
         from repro.workflow.threaded import ThreadedRuntime
+        from repro.workflow.transport import InMemoryTransport, Transport
 
         opts = dict(self.options)
         opts.pop("schedule", None)  # placement already baked into the system
+        transport = opts.pop("transport", None)
         registry = opts.pop("channels", None)
         channel_kwargs = {
             k: opts.pop(k)
             for k in ("drop_prob", "delay_s", "seed")
             if k in opts
         }
-        if registry is None:
-            registry = ChannelRegistry(**channel_kwargs)
-        elif channel_kwargs:
-            raise TypeError(
-                "pass either channels= or per-channel options "
-                f"({sorted(channel_kwargs)}), not both"
-            )
+        if transport is not None:
+            if not isinstance(transport, Transport):
+                raise TypeError(
+                    "transport= must be a repro.workflow.Transport instance "
+                    f"(got {type(transport).__name__}); named transports "
+                    "need per-run addresses — construct one explicitly"
+                )
+            if registry is not None or channel_kwargs:
+                raise TypeError(
+                    "pass either transport= or channel options "
+                    "(channels=/drop_prob/delay_s/seed), not both"
+                )
+        else:
+            if registry is None:
+                registry = ChannelRegistry(**channel_kwargs)
+            elif channel_kwargs:
+                raise TypeError(
+                    "pass either channels= or per-channel options "
+                    f"({sorted(channel_kwargs)}), not both"
+                )
+            transport = InMemoryTransport(registry)
         step_fns = {name: meta.fn for name, meta in self.steps.items()}
         bundles = build_bundles(
             self.system, step_fns, step_meta=dict(self.steps)
@@ -48,14 +64,14 @@ class ThreadedProgram(BackendProgram):
             rt = ThreadedRuntime(
                 bundles,
                 initial_payloads=initial_payloads,
-                channels=registry,
+                transport=transport,
                 **opts,
             )
             data = rt.run()
         return ExecutionResult(
             backend="threaded",
             data={loc: dict(d) for loc, d in data.items()},
-            stats=registry.stats(),
+            stats=transport.stats(),
         )
 
 
@@ -65,7 +81,14 @@ class ThreadedBackend(Backend):
 
     def known_options(self) -> frozenset[str]:
         return super().known_options() | frozenset(
-            {"channels", "drop_prob", "delay_s", "seed", "timeout_s"}
+            {
+                "channels",
+                "transport",
+                "drop_prob",
+                "delay_s",
+                "seed",
+                "timeout_s",
+            }
         )
 
     def compile(

@@ -5,11 +5,22 @@
 * :mod:`~repro.workflow.threaded` — decentralised per-location threads over
   channels (the generated-bundle execution model of paper §5).
 * :mod:`~repro.workflow.channels` — in-process channels with fault injection.
+* :mod:`~repro.workflow.transport` — pluggable COMM transports (in-memory
+  queues, ack-based sockets) shared by the threaded and multiprocess
+  backends.
 * :mod:`~repro.workflow.fault`    — retry/speculation/heartbeat policies.
 * :mod:`~repro.workflow.elastic`  — location renaming, recovery, rebalance.
 """
 
-from .channels import Channel, ChannelRegistry
+from .channels import Channel, ChannelClosed, ChannelRegistry
+from .transport import (
+    InMemoryTransport,
+    SocketTransport,
+    Transport,
+    get_transport,
+    register_transport,
+    socket_addresses,
+)
 from .fault import (
     FlakyFn,
     HeartbeatMonitor,
@@ -31,7 +42,14 @@ from .elastic import (
 
 __all__ = [
     "Channel",
+    "ChannelClosed",
     "ChannelRegistry",
+    "Transport",
+    "InMemoryTransport",
+    "SocketTransport",
+    "register_transport",
+    "get_transport",
+    "socket_addresses",
     "Runtime",
     "RunStats",
     "Checkpoint",

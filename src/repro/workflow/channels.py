@@ -10,10 +10,10 @@ SWIRL data elements are immutable and COMM copies rather than consumes).
 
 from __future__ import annotations
 
-import queue
 import random
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Hashable
 
@@ -55,7 +55,8 @@ class Channel:
         seed: int = 0,
     ):
         self.endpoint = endpoint
-        self._q: queue.Queue[Message] = queue.Queue()
+        self._items: deque[Message] = deque()
+        self._cond = threading.Condition()
         self.drop_prob = drop_prob
         self.delay_s = delay_s
         # Each endpoint gets its own stream, derived from the registry seed
@@ -69,13 +70,17 @@ class Channel:
 
     def put(self, data_name: str, payload: Any) -> bool:
         """Send; returns False if the transport 'lost' the message."""
+        if self._closed.is_set():
+            raise ChannelClosed(f"channel {self.endpoint} is closed")
         self.sent += 1
         if self._rng.random() < self.drop_prob:
             self.dropped += 1
             return False
         if self.delay_s:
             time.sleep(self.delay_s)
-        self._q.put(Message(data_name, payload, self.sent))
+        with self._cond:
+            self._items.append(Message(data_name, payload, self.sent))
+            self._cond.notify()
         return True
 
     def put_reliable(self, data_name: str, payload: Any, *, max_tries: int = 20) -> None:
@@ -88,13 +93,29 @@ class Channel:
         )
 
     def get(self, timeout: float | None = None) -> Message:
-        try:
-            return self._q.get(timeout=timeout)
-        except queue.Empty:
+        """Blocking receive.
+
+        A :meth:`close` wakes blocked receivers immediately: pending
+        messages are still drained after close, then (and on any later
+        call) :class:`ChannelClosed` is raised.  A ``timeout`` raises
+        :class:`TimeoutError` exactly as before.
+        """
+        with self._cond:
+            self._cond.wait_for(
+                lambda: self._items or self._closed.is_set(), timeout
+            )
+            if self._items:
+                return self._items.popleft()
+            if self._closed.is_set():
+                raise ChannelClosed(
+                    f"channel {self.endpoint} closed while receiving"
+                )
             raise TimeoutError(f"recv timed out on {self.endpoint}")
 
     def close(self) -> None:
         self._closed.set()
+        with self._cond:
+            self._cond.notify_all()
 
 
 class ChannelRegistry:
@@ -111,15 +132,24 @@ class ChannelRegistry:
         self._lock = threading.Lock()
         self._seed = seed
         self._kwargs = channel_kwargs
+        self._closed = False
 
     def channel(self, src: str, dst: str, port: str) -> Channel:
         key = (src, dst, port)
         with self._lock:
             if key not in self._channels:
-                self._channels[key] = Channel(
-                    key, seed=self._seed, **self._kwargs
-                )
+                ch = Channel(key, seed=self._seed, **self._kwargs)
+                if self._closed:
+                    ch.close()
+                self._channels[key] = ch
             return self._channels[key]
+
+    def close(self) -> None:
+        """Close every channel (blocked receivers raise ChannelClosed)."""
+        with self._lock:
+            self._closed = True
+            for ch in self._channels.values():
+                ch.close()
 
     # dict-style access used by the generated bundles (core.compile).
     def __getitem__(self, key: Endpoint):

@@ -20,6 +20,7 @@ from typing import Any, Mapping
 from repro.core.compile import LocationBundle
 from repro.core.syntax import Exec, Nil, Par, Recv, Send, Seq, Trace
 from .channels import ChannelRegistry
+from .transport import InMemoryTransport, Transport
 
 
 @dataclass
@@ -71,6 +72,7 @@ class ThreadedRuntime:
         *,
         initial_payloads: Mapping[tuple[str, str], Any] | None = None,
         channels: ChannelRegistry | None = None,
+        transport: Transport | None = None,
         timeout_s: float = 60.0,
     ):
         from repro._compat import warn_legacy
@@ -79,8 +81,15 @@ class ThreadedRuntime:
             "constructing repro.workflow.ThreadedRuntime directly",
             'swirl.trace(...).lower("threaded").compile(step_fns)',
         )
+        if transport is not None and channels is not None:
+            raise TypeError("pass either transport= or channels=, not both")
+        if transport is None:
+            # The historical in-memory queues, behind the Transport API.
+            transport = InMemoryTransport(channels or ChannelRegistry())
         self.bundles = dict(bundles)
-        self.channels = channels or ChannelRegistry()
+        self.transport = transport
+        # Back-compat: the wrapped registry, when the transport has one.
+        self.channels = getattr(transport, "registry", None)
         self.timeout_s = timeout_s
         self._barriers: dict[Exec, _ExecBarrier] = {}
         self._barrier_lock = threading.Lock()
@@ -153,13 +162,11 @@ class ThreadedRuntime:
         if isinstance(t, Send):
             # The datum may be produced by a sibling branch — wait for it.
             payload = self._wait_data(loc, frozenset([t.data]))[t.data]
-            self.channels.channel(t.src, t.dst, t.port).put_reliable(
-                t.data, payload
-            )
+            self.transport.send((t.src, t.dst, t.port), t.data, payload)
             return
         if isinstance(t, Recv):
-            msg = self.channels.channel(t.src, t.dst, t.port).get(
-                timeout=self.timeout_s
+            msg = self.transport.recv(
+                (t.src, t.dst, t.port), timeout=self.timeout_s
             )
             self._put_data(loc, {msg.data_name: msg.payload})
             return

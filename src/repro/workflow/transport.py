@@ -1,0 +1,649 @@
+"""Pluggable COMM transports — the wire under every decentralised backend.
+
+A :class:`Transport` carries SWIRL COMM messages between locations, one
+logically independent FIFO per ``(src, dst, port)`` endpoint.  The threaded
+backend and the multiprocess backend both speak this interface; the only
+difference between "threads over queues" and "processes over sockets" is
+which transport the runtime is handed.
+
+Contract (enforced by ``tests/test_transport.py`` against every registered
+implementation):
+
+* :meth:`Transport.send` blocks until the transport has durably accepted the
+  message and returns exactly once per logical message.  Unreliable wires
+  retransmit (at-least-once) and the receiving side deduplicates by sequence
+  number, so the *effect* is exactly-once — sound because SWIRL data
+  elements are immutable and COMM copies rather than consumes.
+* Messages on one endpoint are delivered in send order; distinct endpoints
+  never leak into each other.
+* :meth:`Transport.recv` with a timeout raises :class:`TimeoutError`; a
+  blocked ``recv`` (and any later one) raises :class:`ChannelClosed` once
+  the transport is closed, after draining already-delivered messages.
+* :meth:`Transport.close` is idempotent and unblocks every waiter.
+
+Two implementations ship in-tree:
+
+==========  ==============================================================
+``memory``  :class:`InMemoryTransport` — the historical in-process queues
+            (:class:`~repro.workflow.channels.ChannelRegistry`) behind the
+            interface; what the ``threaded`` backend uses.
+``socket``  :class:`SocketTransport` — ``multiprocessing.connection``
+            sockets (AF_UNIX, TCP fallback) with pickle payload framing,
+            per-message acks, and resend on ack timeout; what the
+            ``multiprocess`` backend uses across OS processes.
+==========  ==============================================================
+
+Third-party transports join through :func:`register_transport` and get the
+conformance suite for free by implementing :meth:`Transport.conformance`.
+"""
+
+from __future__ import annotations
+
+import os
+import socket as _socket
+import tempfile
+import threading
+import time
+from abc import ABC, abstractmethod
+from collections import deque
+from typing import Any, Iterable, Mapping
+
+from .channels import (
+    Channel,
+    ChannelClosed,
+    ChannelRegistry,
+    Endpoint,
+    Message,
+    endpoint_rng,
+)
+
+__all__ = [
+    "Transport",
+    "InMemoryTransport",
+    "SocketTransport",
+    "HybridTransport",
+    "ChannelClosed",
+    "Message",
+    "TRANSPORTS",
+    "register_transport",
+    "get_transport",
+    "socket_addresses",
+]
+
+#: Poll interval for interruptible blocking waits.
+_POLL_S = 0.05
+
+#: AF_UNIX socket paths are limited to ~108 bytes; stay well under it.
+_MAX_UNIX_PATH = 90
+
+
+class Transport(ABC):
+    """One reliable, per-endpoint-ordered message fabric."""
+
+    #: Registry name (set on subclasses).
+    name: str = "abstract"
+    #: Whether endpoints of this transport can span OS processes.  The
+    #: multiprocess backend refuses transports that cannot.
+    crosses_processes: bool = False
+
+    def open(self, endpoint: Endpoint) -> None:
+        """Declare an endpoint before use (optional; default no-op)."""
+
+    @abstractmethod
+    def send(self, endpoint: Endpoint, data_name: str, payload: Any) -> None:
+        """Deliver one message; blocks until accepted, exactly once."""
+
+    @abstractmethod
+    def recv(
+        self, endpoint: Endpoint, timeout: float | None = None
+    ) -> Message:
+        """Next message on ``endpoint`` (FIFO); TimeoutError on timeout."""
+
+    def close(self) -> None:
+        """Tear down; idempotent, wakes blocked receivers (ChannelClosed)."""
+
+    def stats(self) -> dict[str, Any]:
+        return {}
+
+    @classmethod
+    def conformance(
+        cls,
+        tmp_path: str,
+        locations: Iterable[str],
+        *,
+        loss: float = 0.0,
+        ack_loss: float = 0.0,
+        seed: int = 0,
+    ) -> "Transport":
+        """Build an instance for the conformance suite.
+
+        Must return a transport able to both send and receive between the
+        given ``locations`` within one process, with ``loss``/``ack_loss``
+        injected unreliability (ignore what does not apply).  Implementing
+        this is what opts a registered transport into
+        ``tests/test_transport.py``.
+        """
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# In-memory transport — the refactored historical queues
+# ---------------------------------------------------------------------------
+
+
+class InMemoryTransport(Transport):
+    """The in-process channel queues behind the :class:`Transport` API.
+
+    Wraps a :class:`~repro.workflow.channels.ChannelRegistry`; behaviour is
+    exactly the pre-transport ``threaded`` backend's (including per-endpoint
+    fault injection via the registry's ``drop_prob``/``delay_s``/``seed``).
+    """
+
+    name = "memory"
+    crosses_processes = False
+
+    def __init__(
+        self, registry: ChannelRegistry | None = None, **channel_kwargs: Any
+    ):
+        if registry is not None and channel_kwargs:
+            raise TypeError(
+                "pass either registry= or per-channel options "
+                f"({sorted(channel_kwargs)}), not both"
+            )
+        self.registry = registry or ChannelRegistry(**channel_kwargs)
+
+    def open(self, endpoint: Endpoint) -> None:
+        self.registry.channel(*endpoint)
+
+    def send(self, endpoint: Endpoint, data_name: str, payload: Any) -> None:
+        self.registry.channel(*endpoint).put_reliable(data_name, payload)
+
+    def recv(
+        self, endpoint: Endpoint, timeout: float | None = None
+    ) -> Message:
+        return self.registry.channel(*endpoint).get(timeout)
+
+    def close(self) -> None:
+        self.registry.close()
+
+    def stats(self) -> dict[str, Any]:
+        return self.registry.stats()
+
+    @classmethod
+    def conformance(
+        cls,
+        tmp_path: str,
+        locations: Iterable[str],
+        *,
+        loss: float = 0.0,
+        ack_loss: float = 0.0,
+        seed: int = 0,
+    ) -> "InMemoryTransport":
+        # The queue transport has no separate ack channel: a lost ack and a
+        # lost message are both "the transport did not accept it", retried
+        # by put_reliable.
+        return cls(drop_prob=max(loss, ack_loss), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Socket transport — multiprocessing.connection with acks + resend
+# ---------------------------------------------------------------------------
+
+
+class _Inbox:
+    """Per-endpoint delivery queue with close-aware blocking get."""
+
+    __slots__ = ("_items", "_cond", "_closed")
+
+    def __init__(self) -> None:
+        self._items: deque[Message] = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+
+    def put(self, msg: Message) -> None:
+        with self._cond:
+            self._items.append(msg)
+            self._cond.notify()
+
+    def get(self, timeout: float | None, endpoint: Endpoint) -> Message:
+        with self._cond:
+            ok = self._cond.wait_for(
+                lambda: self._items or self._closed, timeout
+            )
+            if self._items:
+                return self._items.popleft()
+            if self._closed:
+                raise ChannelClosed(
+                    f"transport closed while receiving on {endpoint}"
+                )
+            assert not ok
+            raise TimeoutError(f"recv timed out on {endpoint}")
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+
+def socket_addresses(
+    locations: Iterable[str],
+    *,
+    base_dir: str | os.PathLike | None = None,
+    family: str | None = None,
+) -> dict[str, Any]:
+    """Assign one listener address per location, upfront.
+
+    AF_UNIX paths under ``base_dir`` (or a fresh temp dir) where available —
+    no port collisions, cleaned up with the directory; ``127.0.0.1``
+    ephemeral ports otherwise.  Addresses are allocated *before* any worker
+    starts so every process gets the same address book.
+    """
+    locs = sorted(set(locations))
+    if family is None:
+        family = "AF_UNIX" if hasattr(_socket, "AF_UNIX") else "AF_INET"
+    if family == "AF_UNIX":
+        if base_dir is not None:
+            base = os.fspath(base_dir)
+            os.makedirs(base, exist_ok=True)
+        else:
+            base = tempfile.mkdtemp(prefix="swirl-net-")
+        paths = {
+            loc: os.path.join(base, f"{i}.sock") for i, loc in enumerate(locs)
+        }
+        if all(len(p) <= _MAX_UNIX_PATH for p in paths.values()):
+            return paths
+        family = "AF_INET"  # path too long for sockaddr_un — fall back
+    addrs: dict[str, Any] = {}
+    for loc in locs:
+        s = _socket.socket(_socket.AF_INET, _socket.SOCK_STREAM)
+        s.bind(("127.0.0.1", 0))
+        addrs[loc] = ("127.0.0.1", s.getsockname()[1])
+        s.close()
+    return addrs
+
+
+class SocketTransport(Transport):
+    """COMM over ``multiprocessing.connection`` sockets, ack + resend.
+
+    Every location in ``serve`` gets a listener at ``addresses[location]``;
+    inbound frames are demultiplexed into per-endpoint inboxes by reader
+    threads.  ``send`` opens (and caches) one client connection per endpoint,
+    writes a pickled ``("msg", endpoint, seq, name, payload)`` frame, and
+    blocks until the matching ``("ack", endpoint, seq)`` arrives — resending
+    after ``ack_timeout``, up to ``max_sends`` times (at-least-once).  The
+    receiving side acks every copy but delivers each sequence number once
+    (idempotent receive), so a lost ack never duplicates a message.
+
+    ``drop_prob`` (sender swallows the frame) and ``drop_ack_prob``
+    (receiver swallows the ack) inject wire faults for the conformance and
+    fault-tolerance tests, seeded per endpoint like the channel registry.
+    """
+
+    name = "socket"
+    crosses_processes = True
+
+    def __init__(
+        self,
+        addresses: Mapping[str, Any],
+        *,
+        serve: Iterable[str] = (),
+        authkey: bytes = b"swirl-transport",
+        ack_timeout: float = 1.0,
+        max_sends: int = 20,
+        connect_timeout: float = 15.0,
+        drop_prob: float = 0.0,
+        drop_ack_prob: float = 0.0,
+        seed: int = 0,
+    ):
+        from multiprocessing.connection import Listener
+
+        self._addresses = dict(addresses)
+        self._serve = tuple(sorted(set(serve)))
+        unknown = [l for l in self._serve if l not in self._addresses]
+        if unknown:
+            raise KeyError(f"serve locations without addresses: {unknown}")
+        self._authkey = bytes(authkey)
+        self.ack_timeout = float(ack_timeout)
+        self.max_sends = int(max_sends)
+        self.connect_timeout = float(connect_timeout)
+        self.drop_prob = float(drop_prob)
+        self.drop_ack_prob = float(drop_ack_prob)
+        self._seed = int(seed)
+
+        self._closed = threading.Event()
+        self._inboxes: dict[Endpoint, _Inbox] = {}
+        self._inbox_lock = threading.Lock()
+        self._delivered: dict[Endpoint, int] = {}
+        self._deliver_lock = threading.Lock()
+        self._conns: dict[Endpoint, Any] = {}
+        self._send_locks: dict[Endpoint, threading.Lock] = {}
+        self._seq: dict[Endpoint, int] = {}
+        self._drop_rngs: dict[Endpoint, Any] = {}
+        self._ack_rngs: dict[Endpoint, Any] = {}
+        self._server_conns: list[Any] = []
+        self._threads: list[threading.Thread] = []
+        # Counters are bumped from reader threads and concurrent senders —
+        # serialise the read-modify-write or increments get lost.
+        self._stats_lock = threading.Lock()
+        self._stats = {
+            "sent": 0,
+            "delivered": 0,
+            "duplicates": 0,
+            "resends": 0,
+            "dropped": 0,
+            "acks_dropped": 0,
+        }
+        self._listeners = {}
+        for loc in self._serve:
+            listener = Listener(self._addresses[loc], authkey=self._authkey)
+            self._listeners[loc] = listener
+            th = threading.Thread(
+                target=self._accept_loop,
+                args=(listener,),
+                name=f"swirl-accept-{loc}",
+                daemon=True,
+            )
+            th.start()
+            self._threads.append(th)
+
+    def _bump(self, key: str) -> None:
+        with self._stats_lock:
+            self._stats[key] += 1
+
+    # -- receive path --------------------------------------------------------
+
+    def _inbox(self, endpoint: Endpoint) -> _Inbox:
+        with self._inbox_lock:
+            box = self._inboxes.get(endpoint)
+            if box is None:
+                box = self._inboxes[endpoint] = _Inbox()
+                if self._closed.is_set():
+                    box.close()
+            return box
+
+    def _accept_loop(self, listener) -> None:
+        while not self._closed.is_set():
+            try:
+                conn = listener.accept()
+            except Exception:  # closed listener or failed auth handshake
+                if self._closed.is_set():
+                    return
+                continue
+            self._server_conns.append(conn)
+            th = threading.Thread(
+                target=self._reader, args=(conn,), daemon=True
+            )
+            th.start()
+            self._threads.append(th)
+
+    def _reader(self, conn) -> None:
+        while not self._closed.is_set():
+            try:
+                frame = conn.recv()
+            except (EOFError, OSError):
+                break
+            if not (isinstance(frame, tuple) and frame and frame[0] == "msg"):
+                continue
+            _, endpoint, seq, name, payload = frame
+            endpoint = tuple(endpoint)
+            with self._deliver_lock:
+                duplicate = seq <= self._delivered.get(endpoint, 0)
+                if not duplicate:
+                    self._delivered[endpoint] = seq
+                    # Deliver under the lock so two connections carrying the
+                    # same endpoint cannot reorder fresh sequence numbers.
+                    self._inbox(endpoint).put(Message(name, payload, seq))
+            self._bump("duplicates" if duplicate else "delivered")
+            if (
+                self.drop_ack_prob
+                and self._rng(self._ack_rngs, endpoint, salt=1).random()
+                < self.drop_ack_prob
+            ):
+                self._bump("acks_dropped")
+                continue
+            try:
+                conn.send(("ack", endpoint, seq))
+            except (EOFError, OSError, BrokenPipeError):
+                break
+
+    def recv(
+        self, endpoint: Endpoint, timeout: float | None = None
+    ) -> Message:
+        return self._inbox(tuple(endpoint)).get(timeout, tuple(endpoint))
+
+    # -- send path -----------------------------------------------------------
+
+    def _rng(self, cache: dict, endpoint: Endpoint, *, salt: int = 0):
+        rng = cache.get(endpoint)
+        if rng is None:
+            rng = cache[endpoint] = endpoint_rng(self._seed + salt, endpoint)
+        return rng
+
+    def _connect(self, endpoint: Endpoint):
+        from multiprocessing.connection import Client
+
+        conn = self._conns.get(endpoint)
+        if conn is not None:
+            return conn
+        dst = endpoint[1]
+        try:
+            address = self._addresses[dst]
+        except KeyError:
+            raise KeyError(
+                f"no address for destination {dst!r}; "
+                f"known: {sorted(self._addresses)}"
+            ) from None
+        deadline = time.monotonic() + self.connect_timeout
+        while True:
+            if self._closed.is_set():
+                raise ChannelClosed(f"transport closed; cannot reach {dst!r}")
+            try:
+                conn = Client(address, authkey=self._authkey)
+                break
+            except (OSError, EOFError) as e:
+                # Peer's listener may not be bound yet — retry briefly.
+                if time.monotonic() >= deadline:
+                    raise ChannelClosed(
+                        f"cannot connect to {dst!r} at {address!r}: {e}"
+                    ) from e
+                time.sleep(0.02)
+        self._conns[endpoint] = conn
+        return conn
+
+    def send(self, endpoint: Endpoint, data_name: str, payload: Any) -> None:
+        endpoint = tuple(endpoint)
+        if self._closed.is_set():
+            raise ChannelClosed(f"transport closed; cannot send on {endpoint}")
+        lock = self._send_locks.setdefault(endpoint, threading.Lock())
+        with lock:
+            conn = self._connect(endpoint)
+            self._seq[endpoint] = seq = self._seq.get(endpoint, 0) + 1
+            self._bump("sent")
+            rng = self._rng(self._drop_rngs, endpoint)
+            for attempt in range(self.max_sends):
+                if self._closed.is_set():
+                    raise ChannelClosed(
+                        f"transport closed; cannot send on {endpoint}"
+                    )
+                if attempt:
+                    self._bump("resends")
+                if self.drop_prob and rng.random() < self.drop_prob:
+                    self._bump("dropped")  # simulated wire loss
+                else:
+                    try:
+                        conn.send(("msg", endpoint, seq, data_name, payload))
+                    except (OSError, BrokenPipeError, ValueError) as e:
+                        raise ChannelClosed(
+                            f"connection lost on {endpoint}: {e}"
+                        ) from e
+                if self._await_ack(conn, endpoint, seq):
+                    return
+            raise ChannelClosed(
+                f"no ack after {self.max_sends} sends on {endpoint}"
+            )
+
+    def _await_ack(self, conn, endpoint: Endpoint, seq: int) -> bool:
+        deadline = time.monotonic() + self.ack_timeout
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return False
+            try:
+                if conn.poll(min(remaining, _POLL_S)):
+                    frame = conn.recv()
+                    if (
+                        isinstance(frame, tuple)
+                        and len(frame) == 3
+                        and frame[0] == "ack"
+                        and tuple(frame[1]) == endpoint
+                        and frame[2] == seq
+                    ):
+                        return True
+                    # Stale ack from an earlier resend — keep waiting.
+            except (EOFError, OSError) as e:
+                if self._closed.is_set():
+                    raise ChannelClosed(
+                        f"transport closed; cannot send on {endpoint}"
+                    ) from e
+                raise ChannelClosed(
+                    f"connection lost awaiting ack on {endpoint}: {e}"
+                ) from e
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        if self._closed.is_set():
+            return
+        self._closed.set()
+        for listener in self._listeners.values():
+            try:
+                listener.close()
+            except OSError:
+                pass
+        for conn in list(self._conns.values()) + list(self._server_conns):
+            try:
+                conn.close()
+            except OSError:
+                pass
+        with self._inbox_lock:
+            for box in self._inboxes.values():
+                box.close()
+        for th in self._threads:
+            th.join(0.2)
+
+    def stats(self) -> dict[str, Any]:
+        with self._stats_lock:
+            return dict(self._stats, serving=list(self._serve))
+
+    @classmethod
+    def conformance(
+        cls,
+        tmp_path: str,
+        locations: Iterable[str],
+        *,
+        loss: float = 0.0,
+        ack_loss: float = 0.0,
+        seed: int = 0,
+    ) -> "SocketTransport":
+        return cls(
+            socket_addresses(locations, base_dir=tmp_path),
+            serve=locations,
+            ack_timeout=0.1,
+            connect_timeout=5.0,
+            drop_prob=loss,
+            drop_ack_prob=ack_loss,
+            seed=seed,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Hybrid transport — in-process hops for co-resident locations
+# ---------------------------------------------------------------------------
+
+
+class HybridTransport(Transport):
+    """Route co-resident endpoints in memory, the rest over another wire.
+
+    When several locations share one process (the multiprocess backend's
+    schedule pinning / ``workers=`` packing), an endpoint whose ``src`` and
+    ``dst`` are both local has no reason to pay pickling + socket loopback:
+    it goes through ``local`` (an :class:`InMemoryTransport` by default)
+    while every cross-process endpoint uses ``remote``.  This is what makes
+    the cost model's "cheap intra-rack links" literal: pinned locations
+    talk at memory speed.
+
+    Not in the named-transport registry — it is a per-process composite
+    built around an already-configured remote transport, not a wire you
+    select by name.
+    """
+
+    name = "hybrid"
+    crosses_processes = False
+
+    def __init__(
+        self,
+        remote: Transport,
+        local_locations,
+        *,
+        local: Transport | None = None,
+    ):
+        self.remote = remote
+        self.local = local or InMemoryTransport()
+        self._local_locs = frozenset(local_locations)
+
+    def _pick(self, endpoint: Endpoint) -> Transport:
+        src, dst, _ = endpoint
+        if src in self._local_locs and dst in self._local_locs:
+            return self.local
+        return self.remote
+
+    def open(self, endpoint: Endpoint) -> None:
+        self._pick(endpoint).open(endpoint)
+
+    def send(self, endpoint: Endpoint, data_name: str, payload: Any) -> None:
+        self._pick(endpoint).send(endpoint, data_name, payload)
+
+    def recv(
+        self, endpoint: Endpoint, timeout: float | None = None
+    ) -> Message:
+        return self._pick(endpoint).recv(endpoint, timeout)
+
+    def close(self) -> None:
+        self.local.close()
+        self.remote.close()
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "local": self.local.stats(),
+            "remote": self.remote.stats(),
+            "local_locations": sorted(self._local_locs),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+TRANSPORTS: dict[str, type[Transport]] = {}
+
+
+def register_transport(
+    name: str, cls: type[Transport], *, overwrite: bool = False
+) -> None:
+    """Make ``cls`` selectable by name (backend ``transport=`` options)."""
+    if not overwrite and name in TRANSPORTS:
+        raise ValueError(f"transport {name!r} is already registered")
+    TRANSPORTS[name] = cls
+
+
+def get_transport(name: str) -> type[Transport]:
+    try:
+        return TRANSPORTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown transport {name!r}; available: {sorted(TRANSPORTS)}"
+        ) from None
+
+
+register_transport("memory", InMemoryTransport)
+register_transport("socket", SocketTransport)

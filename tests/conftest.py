@@ -6,6 +6,7 @@ only launch/dryrun.py forces the 512-device host platform.
 
 from __future__ import annotations
 
+import os
 import random
 
 import pytest
@@ -20,10 +21,22 @@ from repro.core.graph import DistributedWorkflowInstance, make_workflow
 # ---------------------------------------------------------------------------
 
 try:
-    from hypothesis import given, settings
+    from hypothesis import HealthCheck, given, settings
     from hypothesis import strategies as st
 
     HAVE_HYPOTHESIS = True
+
+    # Profiles: "ci" is fully deterministic (derandomize) so CI never flakes
+    # on a fresh example; "dev" keeps random exploration locally.  Both
+    # disable deadlines — the differential tests spawn real OS processes,
+    # whose wall-clock is environment noise, not a property violation.
+    _relaxed = dict(
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.register_profile("ci", derandomize=True, **_relaxed)
+    settings.register_profile("dev", **_relaxed)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
@@ -49,6 +62,14 @@ except ModuleNotFoundError:
             return strategy
 
     st = _StrategyStub()  # type: ignore[assignment]
+
+    class HealthCheck:  # type: ignore[no-redef]
+        """Placeholder members (settings is a no-op without hypothesis)."""
+
+        too_slow = None
+        data_too_large = None
+        filter_too_much = None
+        function_scoped_fixture = None
 
 
 # ---------------------------------------------------------------------------

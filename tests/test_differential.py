@@ -1,0 +1,155 @@
+"""Cross-backend differential testing: every backend, same final stores.
+
+Random layered DAG workflows (5–20 steps, random fan-in/out, random
+location counts, occasional spatial constraints) go through
+trace → optimize → lower on **every registered backend** — including the
+multiprocess backend's real OS processes — and must produce identical
+final data stores.  The R1R2/R3-rewritten plan must also match the
+unrewritten plan on every backend (the Thm.-1 guarantee made observable).
+
+Two generators drive the same property:
+
+* a seeded ``random.Random`` sweep (``CHUNKS × CHUNK_SIZE`` ≥ 100 DAGs),
+  deterministic everywhere and independent of hypothesis;
+* a hypothesis strategy (the shared ``instances`` strategy from conftest)
+  that additionally shrinks failures; it skips when hypothesis is missing.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+from conftest import given, identity_step_fns, instances, settings
+
+from repro import swirl
+from repro.backends import available_backends
+from repro.core.graph import DistributedWorkflowInstance, make_workflow
+
+#: Options per backend: real-process backends get generous timeouts so a
+#: loaded CI machine cannot turn a pass into a hang-report.
+BACKEND_OPTIONS = {
+    "threaded": {"timeout_s": 60},
+    "multiprocess": {"timeout_s": 120},
+}
+
+CHUNKS = 20
+CHUNK_SIZE = 5  # CHUNKS × CHUNK_SIZE = 100 DAGs ≥ the acceptance floor
+
+
+def random_instance(rng: random.Random) -> DistributedWorkflowInstance:
+    """One random layered DAG instance: 5–20 steps, 1–4 locations."""
+    n_steps = rng.randint(5, 20)
+    n_locs = rng.randint(1, 4)
+    locations = [f"l{i}" for i in range(n_locs)]
+
+    widths: list[int] = []
+    remaining = n_steps
+    while remaining:
+        w = min(remaining, rng.randint(1, 4))
+        widths.append(w)
+        remaining -= w
+
+    steps: list[str] = []
+    ports: list[str] = []
+    deps: list[tuple[str, str]] = []
+    data: list[str] = []
+    placement: dict[str, str] = {}
+    mapping: dict[str, tuple[str, ...]] = {}
+    prev_ports: list[str] = []
+    sid = 0
+    for layer, width in enumerate(widths):
+        new_ports: list[str] = []
+        for _ in range(width):
+            s = f"s{sid}"
+            sid += 1
+            steps.append(s)
+            if n_locs > 1 and rng.random() < 0.15:
+                # Spatial constraint: the step runs on two locations.
+                mapping[s] = tuple(sorted(rng.sample(locations, 2)))
+            else:
+                mapping[s] = (rng.choice(locations),)
+            if prev_ports:
+                n_in = rng.randint(0, min(3, len(prev_ports)))
+                for p in rng.sample(prev_ports, n_in):
+                    deps.append((p, s))
+            if layer < len(widths) - 1 or rng.random() < 0.5:
+                p, d = f"p{s}", f"d{s}"
+                ports.append(p)
+                data.append(d)
+                placement[d] = p
+                deps.append((s, p))
+                new_ports.append(p)
+        prev_ports = new_ports
+    wf = make_workflow(steps, ports, deps)
+    return DistributedWorkflowInstance(
+        workflow=wf,
+        locations=frozenset(locations),
+        mapping=mapping,
+        data=frozenset(data),
+        placement=placement,
+        initial_data={},
+    )
+
+
+def _run(plan, inst, backend):
+    lowered = plan.lower(backend, **BACKEND_OPTIONS.get(backend, {}))
+    return lowered.compile(identity_step_fns(inst)).run().data
+
+
+def _assert_backends_agree(inst, *, check_raw: bool) -> None:
+    raw = swirl.trace(inst)
+    opt = raw.optimize(("R1R2", "R3"))
+    backends = available_backends()
+    results = {b: _run(opt, inst, b) for b in backends}
+    reference_backend = backends[0]
+    reference = results[reference_backend]
+    for b, got in results.items():
+        assert got == reference, (
+            f"{b} diverged from {reference_backend} on the optimized plan"
+        )
+    if check_raw:
+        for b in backends:
+            assert _run(raw, inst, b) == reference, (
+                f"{b}: R1R2/R3-rewritten plan diverged from the "
+                "unrewritten plan"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Seeded sweep — ≥100 DAGs, runs with or without hypothesis
+# ---------------------------------------------------------------------------
+
+
+class TestSeededSweep:
+    @pytest.mark.parametrize("chunk", range(CHUNKS))
+    def test_all_backends_agree(self, chunk):
+        for i in range(CHUNK_SIZE):
+            rng = random.Random(1000 * chunk + i)
+            inst = random_instance(rng)
+            # The raw-vs-rewritten cross-check costs a second full sweep of
+            # backend runs; one DAG per chunk keeps it at 20/100 DAGs.
+            _assert_backends_agree(inst, check_raw=(i == 0))
+
+    def test_generator_respects_bounds(self):
+        for seed in range(200):
+            inst = random_instance(random.Random(seed))
+            assert 5 <= len(inst.workflow.steps) <= 20
+            assert 1 <= len(inst.locations) <= 4
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis — same property, shrinking counterexamples
+# ---------------------------------------------------------------------------
+
+
+class TestHypothesisDifferential:
+    @given(inst=instances(max_layers=4, max_width=3, max_locations=3))
+    @settings(max_examples=15, deadline=None)
+    def test_all_backends_agree(self, inst):
+        _assert_backends_agree(inst, check_raw=False)
+
+    @given(inst=instances(max_layers=3, max_width=3, max_locations=3))
+    @settings(max_examples=10, deadline=None)
+    def test_rewritten_matches_unrewritten_everywhere(self, inst):
+        _assert_backends_agree(inst, check_raw=True)

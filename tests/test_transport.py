@@ -1,0 +1,259 @@
+"""Transport conformance suite — run against every registered transport.
+
+One parametrised test class exercises the :class:`repro.workflow.Transport`
+contract (per-endpoint FIFO ordering, exactly-once effect under lossy wires
+and lost acks, close-while-blocked raising ``ChannelClosed``, no
+cross-endpoint leakage).  The parametrisation iterates the transport
+registry, so a future transport gets the whole suite for free by calling
+``register_transport`` and implementing ``Transport.conformance``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.workflow.transport import (
+    TRANSPORTS,
+    ChannelClosed,
+    HybridTransport,
+    InMemoryTransport,
+    SocketTransport,
+    Transport,
+    get_transport,
+    register_transport,
+    socket_addresses,
+)
+
+LOCATIONS = ("alpha", "beta")
+EP = ("alpha", "beta", "port0")
+
+
+@pytest.fixture(params=sorted(TRANSPORTS))
+def make(request, tmp_path):
+    """Factory building (and tracking for teardown) conformance instances."""
+    built: list[Transport] = []
+
+    def factory(locations=LOCATIONS, **faults) -> Transport:
+        t = TRANSPORTS[request.param].conformance(
+            str(tmp_path / f"t{len(built)}"), locations, **faults
+        )
+        built.append(t)
+        return t
+
+    yield factory
+    for t in built:
+        t.close()
+
+
+class TestTransportConformance:
+    def test_per_endpoint_fifo_ordering(self, make):
+        t = make()
+        for i in range(64):
+            t.send(EP, f"d{i}", i)
+        got = [t.recv(EP, timeout=10.0).payload for _ in range(64)]
+        assert got == list(range(64))
+
+    def test_no_cross_endpoint_leakage(self, make):
+        t = make()
+        eps = [
+            ("alpha", "beta", "p0"),
+            ("alpha", "beta", "p1"),
+            ("beta", "alpha", "p0"),
+        ]
+        for i in range(8):
+            for j, ep in enumerate(eps):
+                t.send(ep, f"d{j}", (j, i))
+        for j, ep in enumerate(eps):
+            got = [t.recv(ep, timeout=10.0).payload for _ in range(8)]
+            assert got == [(j, i) for i in range(8)], f"leak into {ep}"
+
+    def test_lossy_wire_delivers_exactly_once_in_order(self, make):
+        """At-least-once resend on timeout + idempotent receive."""
+        t = make(loss=0.5, seed=7)
+        for i in range(32):
+            t.send(EP, f"d{i}", i)
+        got = [t.recv(EP, timeout=10.0).payload for _ in range(32)]
+        assert got == list(range(32))
+        with pytest.raises(TimeoutError):
+            t.recv(EP, timeout=0.05)  # no duplicate ever surfaces
+
+    def test_lost_acks_do_not_duplicate(self, make):
+        """A swallowed ack forces a resend; the receive side deduplicates."""
+        t = make(ack_loss=0.5, seed=11)
+        for i in range(32):
+            t.send(EP, f"d{i}", i)
+        got = [t.recv(EP, timeout=10.0).payload for _ in range(32)]
+        assert got == list(range(32))
+        with pytest.raises(TimeoutError):
+            t.recv(EP, timeout=0.05)
+
+    def test_recv_timeout_raises_timeout_error(self, make):
+        t = make()
+        with pytest.raises(TimeoutError):
+            t.recv(EP, timeout=0.05)
+
+    def test_close_while_blocked_raises_channel_closed(self, make):
+        t = make()
+        caught: list[BaseException] = []
+        blocked = threading.Event()
+
+        def receiver():
+            blocked.set()
+            try:
+                t.recv(EP, timeout=30.0)
+            except ChannelClosed as e:
+                caught.append(e)
+
+        th = threading.Thread(target=receiver, daemon=True)
+        th.start()
+        assert blocked.wait(5.0)
+        time.sleep(0.1)  # let the receiver actually block
+        t.close()
+        th.join(5.0)
+        assert not th.is_alive(), "close() did not unblock the receiver"
+        assert caught and isinstance(caught[0], ChannelClosed)
+
+    def test_send_after_close_raises_channel_closed(self, make):
+        t = make()
+        t.close()
+        with pytest.raises(ChannelClosed):
+            t.send(EP, "d", 1)
+
+    def test_pending_messages_drain_before_closed_raises(self, make):
+        t = make()
+        # send() blocks until the message is delivered/acked, so all three
+        # are already in the inbox when close() lands.
+        for i in range(3):
+            t.send(EP, f"d{i}", i)
+        t.close()
+        got = [t.recv(EP, timeout=10.0).payload for _ in range(3)]
+        assert got == [0, 1, 2]
+        with pytest.raises(ChannelClosed):
+            t.recv(EP, timeout=5.0)
+
+    def test_close_is_idempotent(self, make):
+        t = make()
+        t.close()
+        t.close()
+
+    def test_concurrent_senders_on_distinct_endpoints(self, make):
+        t = make()
+        eps = [("alpha", "beta", f"p{i}") for i in range(4)]
+        errs: list[BaseException] = []
+
+        def sender(ep):
+            try:
+                for i in range(16):
+                    t.send(ep, f"d{i}", i)
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [
+            threading.Thread(target=sender, args=(ep,), daemon=True)
+            for ep in eps
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(30.0)
+        assert not errs
+        for ep in eps:
+            got = [t.recv(ep, timeout=10.0).payload for _ in range(16)]
+            assert got == list(range(16))
+
+
+# ---------------------------------------------------------------------------
+# Registry + construction specifics (not part of the per-transport contract)
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert get_transport("memory") is InMemoryTransport
+        assert get_transport("socket") is SocketTransport
+
+    def test_unknown_name(self):
+        with pytest.raises(KeyError, match="unknown transport"):
+            get_transport("carrier-pigeon")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_transport("memory", InMemoryTransport)
+
+    def test_crosses_processes_flags(self):
+        assert not InMemoryTransport.crosses_processes
+        assert SocketTransport.crosses_processes
+
+
+class TestSocketSpecifics:
+    def test_addresses_are_per_location_and_stable(self, tmp_path):
+        a = socket_addresses(["x", "y", "z"], base_dir=tmp_path)
+        b = socket_addresses(["z", "y", "x"], base_dir=tmp_path)
+        assert a == b
+        assert len(set(a.values())) == 3
+
+    def test_serve_requires_address(self, tmp_path):
+        addrs = socket_addresses(["x"], base_dir=tmp_path)
+        with pytest.raises(KeyError, match="serve locations"):
+            SocketTransport(addrs, serve=("ghost",))
+
+    def test_resend_stats_recorded_under_loss(self, tmp_path):
+        t = SocketTransport.conformance(
+            str(tmp_path), LOCATIONS, loss=0.5, seed=3
+        )
+        try:
+            for i in range(16):
+                t.send(EP, f"d{i}", i)
+            for _ in range(16):
+                t.recv(EP, timeout=10.0)
+            stats = t.stats()
+            assert stats["dropped"] > 0
+            assert stats["resends"] >= stats["dropped"]
+            assert stats["delivered"] == 16
+        finally:
+            t.close()
+
+    def test_unreachable_destination_raises(self, tmp_path):
+        addrs = socket_addresses(LOCATIONS, base_dir=tmp_path)
+        t = SocketTransport(addrs, serve=("alpha",), connect_timeout=0.3)
+        try:
+            with pytest.raises(ChannelClosed, match="cannot connect"):
+                t.send(("alpha", "beta", "p"), "d", 1)
+        finally:
+            t.close()
+
+
+class TestHybrid:
+    """The co-residency composite used by multi-location worker processes."""
+
+    @pytest.fixture
+    def hybrid(self, tmp_path):
+        remote = SocketTransport.conformance(
+            str(tmp_path), ("alpha", "beta", "gamma")
+        )
+        t = HybridTransport(remote, ("alpha", "beta"))
+        yield t
+        t.close()
+
+    def test_local_endpoints_never_touch_the_wire(self, hybrid):
+        hybrid.send(("alpha", "beta", "p"), "d", 42)
+        assert hybrid.recv(("alpha", "beta", "p"), timeout=5.0).payload == 42
+        assert hybrid.stats()["remote"]["sent"] == 0
+        assert hybrid.stats()["local"]["sent"] == 1
+
+    def test_cross_endpoints_use_the_remote_wire(self, hybrid):
+        hybrid.send(("alpha", "gamma", "p"), "d", 7)
+        assert (
+            hybrid.recv(("alpha", "gamma", "p"), timeout=5.0).payload == 7
+        )
+        assert hybrid.stats()["remote"]["sent"] == 1
+
+    def test_close_closes_both_sides(self, hybrid):
+        hybrid.close()
+        with pytest.raises(ChannelClosed):
+            hybrid.send(("alpha", "beta", "p"), "d", 1)
+        with pytest.raises(ChannelClosed):
+            hybrid.send(("alpha", "gamma", "p"), "d", 1)
