@@ -12,6 +12,10 @@ Prints ``name,value,unit,derived`` CSV rows.  Sections:
   backend (real OS processes over the ack-based socket transport);
 * ``sched``     — cost-model-driven placement (repro.sched) vs round-robin
   on the 1000 Genomes workflow under the two-rack network preset;
+* ``compile``   — compilation pipeline at scale: encode+R1R2+R3 wall-clock
+  on random layered DAGs at 100/1k/2k/10k steps, recursive tree engine vs
+  the flat indexed IR, plus ``auto_placement`` on a 500-step DAG (the
+  incremental placement scorer);
 * ``bisim``     — LTS sizes + exact bisimulation check time (Thm. 1);
 * ``kernels``   — Pallas kernels (interpret mode) vs jnp references;
 * ``train``     — SWIRL-planned trainer steps/s (smoke config);
@@ -217,6 +221,84 @@ def bench_sched() -> None:
         )
 
 
+def bench_compile() -> None:
+    """Compilation at 10k-step scale: tree engine vs flat indexed IR.
+
+    The DAG family is collective-heavy (40% of steps are two-location
+    spatial constraints, the multi-pod-trainer profile) so rule R3 — whose
+    tree implementation rebuilds the trace per removed action — has real
+    work to do.  The tree pipeline is ``encode`` + the recursive reference
+    engines; the flat pipeline is ``encode_flat`` + the single-pass flat
+    engines + one tree reconstruction.  Both must produce the identical
+    system (asserted) before their times are compared.
+    """
+    from repro.core import encode, encode_flat
+    from repro.core.flat import FLAT_RULES
+    from repro.core.optimizer import rewrite_spatial_tree, rewrite_system_tree
+    from repro.core.randgen import random_layered_instance
+    from repro.sched import CostModel, NetworkModel, SizeModel, auto_placement
+
+    def tree_pipeline(inst):
+        w = encode(inst)
+        o, _ = rewrite_system_tree(w)
+        return rewrite_spatial_tree(o)[0]
+
+    def flat_pipeline(inst):
+        fs = encode_flat(inst)
+        FLAT_RULES["R1R2"](fs)
+        FLAT_RULES["R3"](fs)
+        return fs.rebuild_system()
+
+    cases = [(100, True, 3), (1000, True, 3), (2000, True, 2), (10000, False, 1)]
+    for n, tree_too, repeat in cases:
+        inst = random_layered_instance(
+            n, n_locations=4, seed=0, p_spatial=0.4
+        )
+        # Warm the instance-level adjacency/topology caches once — both
+        # pipelines share them, so neither arm pays the one-off build.
+        encode(inst)
+        dt_flat, flat_sys = _t(flat_pipeline, inst, repeat=repeat)
+        row(
+            f"compile/flat_{n}steps", f"{dt_flat * 1e3:.1f}", "ms",
+            f"actions={flat_sys.total_actions()}",
+        )
+        if tree_too:
+            dt_tree, tree_sys = _t(tree_pipeline, inst, repeat=repeat)
+            assert tree_sys == flat_sys, "engines diverged — do not compare"
+            row(
+                f"compile/tree_{n}steps", f"{dt_tree * 1e3:.1f}", "ms",
+                "recursive reference engines",
+            )
+            row(
+                f"compile/speedup_{n}steps", f"{dt_tree / dt_flat:.1f}", "x",
+                "flat vs tree, end-to-end encode+R1R2+R3",
+            )
+        else:
+            row(
+                f"compile/tree_{n}steps", "skipped", "",
+                "quadratic R3 — minutes at this size",
+            )
+
+    # Placement search at scale: the incremental scorer patches rows and
+    # re-schedules through the shared array core instead of re-encoding,
+    # re-rewriting and re-simulating trees per candidate move.
+    inst = random_layered_instance(500, n_locations=4, seed=1, p_spatial=0.1)
+    dt, report = _t(
+        lambda: auto_placement(
+            inst,
+            NetworkModel.preset("two-rack"),
+            sizes=SizeModel(default_bytes=1 << 18),
+            costs=CostModel(default_exec_s=2e-3),
+        ),
+        repeat=1,
+    )
+    row(
+        "compile/auto_placement_500steps", f"{dt:.1f}", "s",
+        f"target <30s; bytes saved {report.bytes_saved_frac * 100:.0f}% "
+        f"makespan {report.makespan_speedup:.2f}x vs round-robin",
+    )
+
+
 def bench_bisim() -> None:
     from repro.core import encode, rewrite_system, weak_barbed_bisimilar
     from repro.core.semantics import reachable_states
@@ -297,6 +379,7 @@ SECTIONS = {
     "runtime": bench_runtime,
     "dist": bench_dist,
     "sched": bench_sched,
+    "compile": bench_compile,
     "bisim": bench_bisim,
     "kernels": bench_kernels,
     "train": bench_train,

@@ -38,6 +38,8 @@ from __future__ import annotations
 
 import os
 import threading
+import time
+from collections import OrderedDict
 from concurrent.futures import Future
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Mapping, Sequence
@@ -67,6 +69,7 @@ __all__ = [
     "BisimCertificate",
     "ExecutionResult",
     "ConcurrentRunError",
+    "clear_compile_cache",
 ]
 
 
@@ -106,10 +109,9 @@ def trace(
       text containing a location configuration.
     """
     if isinstance(source, SWIRLTranslator):
-        inst = source.instance()
-        return Plan(system=encode(inst), instance=inst)
+        return _traced(source.instance())
     if isinstance(source, DistributedWorkflowInstance):
-        return Plan(system=encode(source), instance=source)
+        return _traced(source)
     if isinstance(source, WorkflowSystem):
         return Plan(system=source)
     if isinstance(source, Mapping):
@@ -123,8 +125,7 @@ def trace(
             mapping=mapping,
             initial_data=initial_data or {},
         )
-        inst = translator.instance()
-        return Plan(system=encode(inst), instance=inst)
+        return _traced(translator.instance())
     if isinstance(source, (str, os.PathLike)):
         text = os.fspath(source)
         if isinstance(source, os.PathLike) or text.endswith(".swirl"):
@@ -134,6 +135,100 @@ def trace(
                 text = f.read()
         return Plan(system=parse_system(text))
     raise TypeError(f"cannot trace {type(source).__name__}")
+
+
+def _traced(inst: DistributedWorkflowInstance) -> "Plan":
+    t0 = time.perf_counter()
+    system = encode(inst)
+    return Plan(
+        system=system,
+        instance=inst,
+        timings=(("encode", time.perf_counter() - t0),),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Compile cache — re-derivations keyed by (instance hash, rules, placement)
+# ---------------------------------------------------------------------------
+#
+# Scheduling and placement overrides re-derive the plan (re-encode under the
+# new M, re-apply the recorded rewrites).  The search that *chose* the
+# placement already proved the result; repeating the derivation for every
+# ``lower()``/``schedule()`` of the same (instance, rules, placement) triple
+# is pure waste at 10k-step scale, so the outcome is cached in a small LRU.
+# Everything stored is immutable and shared safely between plans.
+
+_DERIVE_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+#: Small on purpose: each entry pins a full rewritten system plus its
+#: pre-optimisation origin, which at 10k-step scale is tens of MB.  The
+#: cache exists to absorb repeated derivations of the *same* plan
+#: (schedule → lower → explain chains), not to memoise sweeps.
+_DERIVE_CACHE_MAX = 32
+#: Plans are immutable and freely shared across threads, so the cache they
+#: all consult must be too: every get/move_to_end/insert/evict happens
+#: under this lock (an unlocked hit could be evicted by a concurrent
+#: insert between ``get`` and ``move_to_end``).
+_DERIVE_CACHE_LOCK = threading.Lock()
+
+
+def clear_compile_cache() -> None:
+    """Drop every cached derivation (see ``_DERIVE_CACHE``).
+
+    Useful in long-running processes that sweep many large distinct plans
+    and want the memory back deterministically.
+    """
+    with _DERIVE_CACHE_LOCK:
+        _DERIVE_CACHE.clear()
+
+
+def _instance_key(inst: DistributedWorkflowInstance) -> tuple:
+    """Stable hashable fingerprint of everything but the step mapping."""
+    return (
+        inst.workflow,
+        inst.data,
+        tuple(sorted(inst.placement.items())),
+        tuple(sorted(inst.initial_data.items())),
+        inst.locations,
+    )
+
+
+def _placement_key(mapping: Mapping[str, Sequence[str]]) -> tuple:
+    return tuple(sorted((s, tuple(ls)) for s, ls in mapping.items()))
+
+
+def _derive_plan(
+    inst: DistributedWorkflowInstance,
+    rules: Sequence[str],
+    *,
+    schedule_report: "ScheduleReport | None" = None,
+) -> "Plan":
+    """Encode ``inst`` and apply ``rules``, through the compile cache."""
+    t0 = time.perf_counter()
+    key = (_instance_key(inst), tuple(rules), _placement_key(inst.mapping))
+    with _DERIVE_CACHE_LOCK:
+        hit = _DERIVE_CACHE.get(key)
+        if hit is not None:
+            _DERIVE_CACHE.move_to_end(key)
+    if hit is not None:
+        system, origin, rewrites = hit
+        return Plan(
+            system=system,
+            instance=inst,
+            origin=origin,
+            rewrites=rewrites,
+            schedule_report=schedule_report,
+            timings=(("derive (cached)", time.perf_counter() - t0),),
+        )
+    plan = _traced(inst)
+    if rules:
+        plan = plan.optimize(rules)
+    if schedule_report is not None:
+        plan = replace(plan, schedule_report=schedule_report)
+    with _DERIVE_CACHE_LOCK:
+        _DERIVE_CACHE[key] = (plan.system, plan.origin, plan.rewrites)
+        while len(_DERIVE_CACHE) > _DERIVE_CACHE_MAX:
+            _DERIVE_CACHE.popitem(last=False)
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +268,9 @@ class Plan:
     rewrites: tuple[AppliedRewrite, ...] = ()
     certificate: BisimCertificate | None = None
     schedule_report: ScheduleReport | None = None
+    #: Per-phase wall-clock durations ``(label, seconds)`` in the order the
+    #: phases ran — rendered by :meth:`explain`.
+    timings: tuple[tuple[str, float], ...] = ()
 
     # -- optimisation -------------------------------------------------------
     def optimize(
@@ -190,25 +288,48 @@ class Plan:
         spatial-constraint deduplication.  With ``certify=True`` the result
         carries a :class:`BisimCertificate` checking ``W ≈ ⟦W⟧`` exactly
         (exponential in system size — keep certified systems small).
+
+        Rules with a flat-engine implementation run as one pipeline over
+        the flat IR (one flatten, one tree reconstruction for the whole
+        list); anything else falls back to per-rule tree rewriting.
         """
-        system = self.system
-        applied = list(self.rewrites)
+        from repro.core.flat import FLAT_RULES, rewrite_flat_pipeline
+
         for rule in rules:
-            try:
-                rewrite = REWRITE_RULES[rule]
-            except KeyError:
+            if rule not in REWRITE_RULES:
                 raise ValueError(
                     f"unknown rewrite rule {rule!r}; "
                     f"known: {sorted(REWRITE_RULES)}"
-                ) from None
-            system, stats = rewrite(system)
-            applied.append(AppliedRewrite(rule, stats))
+                )
+        system = self.system
+        applied = list(self.rewrites)
+        timings = list(self.timings)
+        rules = tuple(rules)
+        if rules and all(r in FLAT_RULES for r in rules):
+            t0 = time.perf_counter()
+            system, stats_list = rewrite_flat_pipeline(system, rules)
+            timings.append(
+                (f"rewrite:{'+'.join(rules)}", time.perf_counter() - t0)
+            )
+            applied.extend(
+                AppliedRewrite(rule, stats)
+                for rule, stats in zip(rules, stats_list)
+            )
+        else:
+            for rule in rules:
+                t0 = time.perf_counter()
+                system, stats = REWRITE_RULES[rule](system)
+                timings.append(
+                    (f"rewrite:{rule}", time.perf_counter() - t0)
+                )
+                applied.append(AppliedRewrite(rule, stats))
         plan = replace(
             self,
             system=system,
             origin=self.origin if self.origin is not None else self.system,
             rewrites=tuple(applied),
             certificate=None,
+            timings=tuple(timings),
         )
         return plan.certify(max_states=max_states) if certify else plan
 
@@ -251,22 +372,23 @@ class Plan:
 
     def steps(self) -> tuple[str, ...]:
         """Every step name executed anywhere in the system."""
-        names = {
-            a.step
-            for cfg in self.system.configs
-            for a in actions(cfg.trace)
-            if isinstance(a, Exec)
-        }
-        return tuple(sorted(names))
+        cached = self.__dict__.get("_steps")
+        if cached is None:
+            cached = tuple(sorted(self.placement()))
+            self.__dict__["_steps"] = cached
+        return cached
 
     def placement(self) -> dict[str, tuple[str, ...]]:
         """Step → locations, from the exec predicates (``M`` reconstructed)."""
-        out: dict[str, tuple[str, ...]] = {}
-        for cfg in self.system.configs:
-            for a in actions(cfg.trace):
-                if isinstance(a, Exec):
-                    out[a.step] = tuple(sorted(a.locations))
-        return out
+        cached = self.__dict__.get("_placement")
+        if cached is None:
+            cached = {}
+            for cfg in self.system.configs:
+                for a in actions(cfg.trace):
+                    if isinstance(a, Exec):
+                        cached[a.step] = tuple(sorted(a.locations))
+            self.__dict__["_placement"] = cached
+        return dict(cached)
 
     # -- scheduling ---------------------------------------------------------
     def schedule(
@@ -279,6 +401,7 @@ class Plan:
         costs: CostModel | None = None,
         refine: bool = True,
         pin: Sequence[str] = (),
+        max_evals: int | None = None,
     ) -> "Plan":
         """Choose ``M(s)`` against a network cost model (``repro.sched``).
 
@@ -320,6 +443,7 @@ class Plan:
         # system that will be lowered; a never-optimised plan gets the
         # paper's default rule set.
         rules = tuple(r.rule for r in self.rewrites) or ("R1R2",)
+        t0 = time.perf_counter()
         report = auto_placement(
             self.instance,
             network,
@@ -329,12 +453,14 @@ class Plan:
             refine=refine,
             pin=pin,
             rules=rules,
+            max_evals=max_evals,
         )
+        sched_dt = time.perf_counter() - t0
         inst = replace(self.instance, mapping=dict(report.placement))
-        plan = Plan(
-            system=encode(inst), instance=inst, schedule_report=report
+        plan = _derive_plan(inst, rules, schedule_report=report)
+        return replace(
+            plan, timings=(("schedule", sched_dt),) + plan.timings
         )
-        return plan.optimize(rules)
 
     # -- lowering -----------------------------------------------------------
     def lower(
@@ -415,9 +541,7 @@ class Plan:
                 if l in locations
             },
         )
-        plan = Plan(system=encode(inst), instance=inst)
-        rules = [r.rule for r in self.rewrites]
-        return plan.optimize(rules) if rules else plan
+        return _derive_plan(inst, tuple(r.rule for r in self.rewrites))
 
     # -- introspection ------------------------------------------------------
     def explain(self) -> str:
@@ -453,6 +577,12 @@ class Plan:
             lines.append("-- schedule --")
             for row in self.schedule_report.summary().splitlines():
                 lines.append(f"  {row}")
+        lines.append("")
+        lines.append("-- timings --")
+        if not self.timings:
+            lines.append("  (none recorded — plan built from raw syntax)")
+        for label, seconds in self.timings:
+            lines.append(f"  {label:<24} {seconds * 1e3:9.2f} ms")
         lines.append("")
         lines.append("-- per-location traces --")
         lines.append(self.system.pretty())

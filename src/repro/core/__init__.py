@@ -48,14 +48,24 @@ from .semantics import (
     reachable_states,
     run,
 )
-from .encoding import building_block, encode
+from .encoding import building_block, encode, encode_flat
+from .flat import (
+    FlatConfig,
+    FlatSystem,
+    FlatTrace,
+    flatten_trace,
+    rewrite_flat_pipeline,
+)
 from .optimizer import (
     REWRITE_RULES,
+    REWRITE_RULES_TREE,
     OptimizationStats,
     optimize,
     optimize_spatial,
     rewrite_spatial,
+    rewrite_spatial_tree,
     rewrite_system,
+    rewrite_system_tree,
 )
 from .bisim import weak_barbed_bisimilar
 from .parser import dumps, loads, parse_system, parse_trace
@@ -107,12 +117,21 @@ __all__ = [
     "ExecTransition",
     "CommTransition",
     "encode",
+    "encode_flat",
     "building_block",
+    "FlatTrace",
+    "FlatConfig",
+    "FlatSystem",
+    "flatten_trace",
+    "rewrite_flat_pipeline",
     "optimize",
     "optimize_spatial",
     "rewrite_system",
+    "rewrite_system_tree",
     "rewrite_spatial",
+    "rewrite_spatial_tree",
     "REWRITE_RULES",
+    "REWRITE_RULES_TREE",
     "OptimizationStats",
     "weak_barbed_bisimilar",
     "parse_system",

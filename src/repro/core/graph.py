@@ -8,17 +8,29 @@ locations mapping (Def. 5); an *instance* of it carries both (Def. 7).
 All containers are immutable once constructed (tuples / frozensets) so that
 graphs can be hashed, compared and safely shared between the encoder, the
 optimiser and the runtime scheduler.
+
+Accessor complexity: ``In``/``Out`` projections and the data/port lookups
+are served from lazily-built adjacency indexes (one linear pass over the
+dependency relation, cached on the instance), so encoding and scheduling
+stay linear in workflow size — the original per-call relation scans made
+``⟦·⟧`` quadratic and 10k-step plans intractable.  Immutability makes the
+caches safe: every ``dataclasses.replace`` produces a fresh instance with
+fresh (empty) caches.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from dataclasses import dataclass, field
 from typing import Iterable, Mapping, Sequence
 
 
 def _fset(xs: Iterable[str]) -> frozenset[str]:
     return frozenset(xs)
+
+
+_EMPTY: frozenset[str] = frozenset()
 
 
 @dataclass(frozen=True)
@@ -40,22 +52,47 @@ class Workflow:
             if not (s2p or p2s):
                 raise ValueError(f"dependency {(a, b)} is not (S×P) ∪ (P×S)")
 
+    # -- adjacency indexes (lazy, cached; fields are immutable) -------------
+    def _adjacency(self) -> dict[str, dict[str, frozenset[str]]]:
+        idx = self.__dict__.get("_adj")
+        if idx is None:
+            in_ports: dict[str, set[str]] = {}
+            out_ports: dict[str, set[str]] = {}
+            in_steps: dict[str, set[str]] = {}
+            out_steps: dict[str, set[str]] = {}
+            steps, ports = self.steps, self.ports
+            for a, b in self.deps:
+                if a in steps:  # (s, p)
+                    out_ports.setdefault(a, set()).add(b)
+                    in_steps.setdefault(b, set()).add(a)
+                else:  # (p, s)
+                    in_ports.setdefault(b, set()).add(a)
+                    out_steps.setdefault(a, set()).add(b)
+            idx = {
+                "in_ports": {k: _fset(v) for k, v in in_ports.items()},
+                "out_ports": {k: _fset(v) for k, v in out_ports.items()},
+                "in_steps": {k: _fset(v) for k, v in in_steps.items()},
+                "out_steps": {k: _fset(v) for k, v in out_steps.items()},
+            }
+            object.__setattr__(self, "_adj", idx)
+        return idx
+
     # -- Def. 2 ------------------------------------------------------------
     def in_ports(self, s: str) -> frozenset[str]:
         """``In(s) = {p | (p, s) ∈ D}``."""
-        return _fset(p for (p, s2) in self.deps if s2 == s and p in self.ports)
+        return self._adjacency()["in_ports"].get(s, _EMPTY)
 
     def out_ports(self, s: str) -> frozenset[str]:
         """``Out(s) = {p | (s, p) ∈ D}``."""
-        return _fset(p for (s2, p) in self.deps if s2 == s and p in self.ports)
+        return self._adjacency()["out_ports"].get(s, _EMPTY)
 
     def in_steps(self, p: str) -> frozenset[str]:
         """``In(p) = {s | (s, p) ∈ D}`` — the producers of port ``p``."""
-        return _fset(s for (s, p2) in self.deps if p2 == p and s in self.steps)
+        return self._adjacency()["in_steps"].get(p, _EMPTY)
 
     def out_steps(self, p: str) -> frozenset[str]:
         """``Out(p) = {s | (p, s) ∈ D}`` — the consumers of port ``p``."""
-        return _fset(s for (p2, s) in self.deps if p2 == p and s in self.steps)
+        return self._adjacency()["out_steps"].get(p, _EMPTY)
 
     # -- helpers ------------------------------------------------------------
     def initial_ports(self) -> frozenset[str]:
@@ -63,29 +100,43 @@ class Workflow:
         return _fset(p for p in self.ports if not self.in_steps(p))
 
     def topological_steps(self) -> tuple[str, ...]:
-        """Steps in a deterministic topological order (raises on cycles)."""
+        """Steps in a deterministic topological order (raises on cycles).
+
+        Cached: every ``work_queue`` projection reuses one traversal.
+        """
+        cached = self.__dict__.get("_topo")
+        if cached is not None:
+            return cached
+        # In-degree counts *distinct* upstream steps (a producer feeding a
+        # consumer through several ports is still one completion event) —
+        # counting per (port, producer) pair would leave the consumer's
+        # counter positive forever and misreport an acyclic DAG as cyclic.
         indeg = {s: 0 for s in self.steps}
         for s in self.steps:
+            ups: set[str] = set()
             for p in self.in_ports(s):
-                indeg[s] += len(self.in_steps(p))
+                ups |= self.in_steps(p)
+            indeg[s] = len(ups)
         order: list[str] = []
-        ready = sorted(s for s, d in indeg.items() if d == 0)
+        ready = [s for s, d in indeg.items() if d == 0]
+        heapq.heapify(ready)
         seen: set[str] = set()
         while ready:
-            s = ready.pop(0)
+            s = heapq.heappop(ready)
             order.append(s)
             seen.add(s)
             nxt: set[str] = set()
             for p in self.out_ports(s):
                 nxt |= self.out_steps(p)
-            for t in sorted(nxt):
+            for t in nxt:
                 indeg[t] -= 1
                 if indeg[t] == 0 and t not in seen:
-                    ready.append(t)
-            ready.sort()
+                    heapq.heappush(ready, t)
         if len(order) != len(self.steps):
             raise ValueError("workflow graph contains a cycle")
-        return tuple(order)
+        out = tuple(order)
+        object.__setattr__(self, "_topo", out)
+        return out
 
 
 def make_workflow(
@@ -120,23 +171,39 @@ class WorkflowInstance:
         if missing:
             raise ValueError(f"data without a port: {sorted(missing)}")
 
+    def _port_index(self) -> dict[str, frozenset[str]]:
+        idx = self.__dict__.get("_by_port")
+        if idx is None:
+            by_port: dict[str, set[str]] = {}
+            for d, p in self.placement.items():
+                by_port.setdefault(p, set()).add(d)
+            idx = {p: _fset(ds) for p, ds in by_port.items()}
+            object.__setattr__(self, "_by_port", idx)
+        return idx
+
     def port_of(self, d: str) -> str:
         """``I(d)`` — the port holding data element ``d``."""
         return self.placement[d]
 
     def data_on(self, p: str) -> frozenset[str]:
-        return _fset(d for d, p2 in self.placement.items() if p2 == p)
+        return self._port_index().get(p, _EMPTY)
 
     # -- Def. 4 ------------------------------------------------------------
     def in_data(self, s: str) -> frozenset[str]:
         """``In^D(s) = {d | (d, p) ∈ I ∧ p ∈ In(s)}``."""
-        ins = self.workflow.in_ports(s)
-        return _fset(d for d, p in self.placement.items() if p in ins)
+        by_port = self._port_index()
+        out: frozenset[str] = _EMPTY
+        for p in self.workflow.in_ports(s):
+            out = out | by_port.get(p, _EMPTY)
+        return out
 
     def out_data(self, s: str) -> frozenset[str]:
         """``Out^D(s) = {d | (d, p) ∈ I ∧ p ∈ Out(s)}``."""
-        outs = self.workflow.out_ports(s)
-        return _fset(d for d, p in self.placement.items() if p in outs)
+        by_port = self._port_index()
+        out: frozenset[str] = _EMPTY
+        for p in self.workflow.out_ports(s):
+            out = out | by_port.get(p, _EMPTY)
+        return out
 
 
 @dataclass(frozen=True)
@@ -169,8 +236,15 @@ class DistributedWorkflow:
     # -- Def. 6 ------------------------------------------------------------
     def work_queue(self, l: str) -> tuple[str, ...]:
         """``Q(l) = {s | l ∈ M(s)}`` in deterministic (topological) order."""
-        topo = self.workflow.topological_steps()
-        return tuple(s for s in topo if l in self.mapping[s])
+        queues = self.__dict__.get("_queues")
+        if queues is None:
+            queues = {loc: [] for loc in self.locations}
+            for s in self.workflow.topological_steps():
+                for loc in self.mapping[s]:
+                    queues[loc].append(s)
+            queues = {loc: tuple(q) for loc, q in queues.items()}
+            object.__setattr__(self, "_queues", queues)
+        return queues[l]
 
 
 @dataclass(frozen=True)
@@ -198,8 +272,20 @@ class DistributedWorkflowInstance:
             "initial_data",
             {l: frozenset(ds) for l, ds in dict(self.initial_data).items()},
         )
-        DistributedWorkflow(self.workflow, self.locations, self.mapping)
-        WorkflowInstance(self.workflow, self.data, self.placement)
+        # Validate through the component models and keep them: the
+        # ``distributed``/``instance`` projections (and everything routed
+        # through them — work queues, In^D/Out^D) are served from these
+        # cached views instead of re-validating per call.
+        object.__setattr__(
+            self,
+            "_distributed",
+            DistributedWorkflow(self.workflow, self.locations, self.mapping),
+        )
+        object.__setattr__(
+            self,
+            "_instance",
+            WorkflowInstance(self.workflow, self.data, self.placement),
+        )
         for l, ds in self.initial_data.items():
             if l not in self.locations:
                 raise ValueError(f"initial data on unknown location {l!r}")
@@ -209,11 +295,11 @@ class DistributedWorkflowInstance:
     # Convenience projections -------------------------------------------------
     @property
     def distributed(self) -> DistributedWorkflow:
-        return DistributedWorkflow(self.workflow, self.locations, self.mapping)
+        return self._distributed  # type: ignore[attr-defined]
 
     @property
     def instance(self) -> WorkflowInstance:
-        return WorkflowInstance(self.workflow, self.data, self.placement)
+        return self._instance  # type: ignore[attr-defined]
 
     def locs_of(self, s: str) -> tuple[str, ...]:
         return self.mapping[s]
@@ -224,11 +310,21 @@ class DistributedWorkflowInstance:
     def port_of(self, d: str) -> str:
         return self.placement[d]
 
+    def _memo(self, name: str, key: str, compute) -> frozenset[str]:
+        cache = self.__dict__.get(name)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, name, cache)
+        hit = cache.get(key)
+        if hit is None:
+            hit = cache[key] = compute(key)
+        return hit
+
     def in_data(self, s: str) -> frozenset[str]:
-        return self.instance.in_data(s)
+        return self._memo("_in_data", s, self.instance.in_data)
 
     def out_data(self, s: str) -> frozenset[str]:
-        return self.instance.out_data(s)
+        return self._memo("_out_data", s, self.instance.out_data)
 
     def producers_of_data(self, d: str) -> frozenset[str]:
         """``In(I(d))`` — steps producing the port that holds ``d``."""

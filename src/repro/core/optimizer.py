@@ -20,6 +20,18 @@ keeps the two sides consistent.
 
 Correctness: ``W ≈ ⟦W⟧`` (weak barbed bisimulation, Thm. 1) — checked
 mechanically by :mod:`repro.core.bisim` in the property tests.
+
+Two engines implement each rule:
+
+* the **flat engine** (:mod:`repro.core.flat`) — the default behind
+  :func:`rewrite_system` / :func:`rewrite_spatial`: one indexed pass over
+  per-location action arrays, linear in the action count, built for
+  10k-step plans;
+* the **tree engine** (:func:`rewrite_system_tree` /
+  :func:`rewrite_spatial_tree`) — the original recursive walkers over the
+  immutable trace trees, kept verbatim as the reference oracle the
+  differential property suite (``tests/test_flat_ir.py``) checks the flat
+  engine against.
 """
 
 from __future__ import annotations
@@ -103,11 +115,10 @@ def _rewrite(t: Trace, seen: set, stats: OptimizationStats, loc: str) -> Trace:
     raise TypeError(f"not a trace: {t!r}")
 
 
-def rewrite_system(w: WorkflowSystem) -> tuple[WorkflowSystem, OptimizationStats]:
-    """``⟦W⟧`` — rewrite every location configuration (Def. 15, rules R1+R2).
-
-    Canonical entry point used by :meth:`repro.api.Plan.optimize`.
-    """
+def rewrite_system_tree(
+    w: WorkflowSystem,
+) -> tuple[WorkflowSystem, OptimizationStats]:
+    """R1+R2 via the recursive tree engine (reference oracle)."""
     stats = OptimizationStats()
     configs = []
     for c in w.configs:
@@ -115,6 +126,20 @@ def rewrite_system(w: WorkflowSystem) -> tuple[WorkflowSystem, OptimizationStats
         new_trace = _rewrite(c.trace, seen, stats, c.location)
         configs.append(LocationConfig(c.location, c.data, new_trace))
     return WorkflowSystem(tuple(configs)), stats
+
+
+def rewrite_system(w: WorkflowSystem) -> tuple[WorkflowSystem, OptimizationStats]:
+    """``⟦W⟧`` — rewrite every location configuration (Def. 15, rules R1+R2).
+
+    Canonical entry point used by :meth:`repro.api.Plan.optimize`.  Runs the
+    single-pass flat engine (:func:`repro.core.flat.rewrite_r1r2`);
+    :func:`rewrite_system_tree` is the recursive reference implementation.
+    """
+    from .flat import FlatSystem, rewrite_r1r2
+
+    fs = FlatSystem.from_system(w)
+    stats = rewrite_r1r2(fs)
+    return fs.rebuild_system(), stats
 
 
 def optimize(w: WorkflowSystem) -> tuple[WorkflowSystem, OptimizationStats]:
@@ -166,14 +191,16 @@ def _remove_one(t: Trace, pred) -> tuple[Trace, bool]:
     raise TypeError(f"not a trace: {t!r}")
 
 
-def rewrite_spatial(
+def rewrite_spatial_tree(
     w: WorkflowSystem,
 ) -> tuple[WorkflowSystem, OptimizationStats]:
-    """R3: drop send/recv pairs whose destination co-executes the producer.
+    """R3 via the recursive tree engine (reference oracle).
 
-    Only channels whose port carries a single data element are rewritten
-    (recv predicates name the port, not the datum — with one datum per port
-    the matching is unambiguous; multi-data ports are left untouched).
+    Quadratic: every removal re-walks and rebuilds the trace tree through
+    :func:`_remove_one`.  Kept verbatim (modulo the ``by_location``
+    accounting fix) so the differential suite can check the indexed flat
+    engine against it; production callers go through
+    :func:`rewrite_spatial`.
     """
     stats = OptimizationStats()
 
@@ -217,12 +244,37 @@ def rewrite_spatial(
                 new_cfg[a.dst] = LocationConfig(
                     dst_cfg.location, dst_cfg.data, d_trace
                 )
+                # One predicate removed per side: the send at its source,
+                # the recv at its destination.
                 stats.removed_duplicate += 2
                 stats.by_location[a.src] = stats.by_location.get(a.src, 0) + 1
+                stats.by_location[a.dst] = stats.by_location.get(a.dst, 0) + 1
     return (
         WorkflowSystem(tuple(new_cfg[c.location] for c in w.configs)),
         stats,
     )
+
+
+def rewrite_spatial(
+    w: WorkflowSystem,
+) -> tuple[WorkflowSystem, OptimizationStats]:
+    """R3: drop send/recv pairs whose destination co-executes the producer.
+
+    Only channels whose port carries a single data element are rewritten
+    (recv predicates name the port, not the datum — with one datum per port
+    the matching is unambiguous; multi-data ports are left untouched).
+
+    Runs the indexed flat engine (:func:`repro.core.flat.rewrite_r3`):
+    port→data and location→produces tables are built once and each pair is
+    deleted by index instead of rebuilding the trace tree per removal
+    (:func:`rewrite_spatial_tree`, the reference, is quadratic in plan
+    size).
+    """
+    from .flat import FlatSystem, rewrite_r3
+
+    fs = FlatSystem.from_system(w)
+    stats = rewrite_r3(fs)
+    return fs.rebuild_system(), stats
 
 
 def optimize_spatial(
@@ -241,7 +293,14 @@ def optimize_spatial(
 #: The rule sets :meth:`repro.api.Plan.optimize` can apply, in canonical
 #: application order.  "R1R2" is the paper's Def.-15 scan (local + duplicate
 #: communication removal); "R3" is the spatial-constraint deduplication.
+#: Backed by the flat engines; :data:`REWRITE_RULES_TREE` holds the
+#: recursive reference implementations under the same keys.
 REWRITE_RULES = {
     "R1R2": rewrite_system,
     "R3": rewrite_spatial,
+}
+
+REWRITE_RULES_TREE = {
+    "R1R2": rewrite_system_tree,
+    "R3": rewrite_spatial_tree,
 }

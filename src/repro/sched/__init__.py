@@ -24,6 +24,7 @@ Front door: ``plan.schedule(network=NetworkModel.preset("two-rack"))`` or
 """
 
 from .estimate import CostModel, SizeModel
+from .incremental import PlacementScorer, UnsupportedRules
 from .network import LOCAL_LINK, Link, NetworkModel
 from .place import (
     auto_placement,
@@ -52,5 +53,7 @@ __all__ = [
     "round_robin_placement",
     "evaluate_placement",
     "movable_steps",
+    "PlacementScorer",
+    "UnsupportedRules",
     "ScheduleReport",
 ]

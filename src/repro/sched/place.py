@@ -8,8 +8,13 @@ SWfMS survey):
    datum lives and what the link to it costs.  ``objective="bytes"`` swaps
    the score for incoming cross-location bytes (tie-broken by finish time).
 2. :func:`refine_placement` — first-improvement local search: try moving
-   each movable step to every other location, score the *real* re-encoded
-   plan with the makespan simulator, keep strict improvements.
+   each movable step to every other location, score the *real* plan under
+   the candidate mapping, keep strict improvements.  Scoring is
+   incremental (:class:`~repro.sched.incremental.PlacementScorer`): a move
+   patches the affected per-location rows and comm-key index entries and
+   re-runs the event schedule through the simulator's array core —
+   bit-identical to re-encode + rewrite + simulate, without building
+   trees — under an eval budget that keeps 10k-step searches tractable.
 
 Spatially-constrained steps (``|M(s)| > 1`` — collectives like the
 trainer's ``gradsync``) and explicitly pinned steps are never moved: their
@@ -36,6 +41,7 @@ from repro.core.graph import DistributedWorkflowInstance
 from repro.core.optimizer import REWRITE_RULES
 
 from .estimate import CostModel, SizeModel
+from .incremental import PlacementScorer, UnsupportedRules
 from .network import NetworkModel
 from .report import ScheduleReport
 from .simulate import Simulation, simulate
@@ -210,6 +216,18 @@ def greedy_placement(
     return mapping
 
 
+#: Operation budget behind the default ``max_evals`` policy: the local
+#: search may spend roughly this many action-evaluations (candidate moves ×
+#: plan size) before stopping, so refinement cost stays near-constant as
+#: plans grow — a 20-step plan gets an exhaustive search, a 10k-step plan an
+#: anytime one.  Explicit ``max_evals`` overrides.
+_EVAL_OP_BUDGET = 2_500_000
+
+
+def _default_max_evals(n_actions: int) -> int:
+    return max(512, _EVAL_OP_BUDGET // max(1, n_actions))
+
+
 def refine_placement(
     inst: DistributedWorkflowInstance,
     mapping: Placement,
@@ -221,9 +239,106 @@ def refine_placement(
     pin: Iterable[str] = (),
     max_rounds: int = 3,
     rules: tuple[str, ...] = ("R1R2",),
+    max_evals: int | None = None,
 ) -> tuple[Placement, Simulation]:
-    """First-improvement local search over single-step moves."""
+    """First-improvement local search over single-step moves.
+
+    Candidates are scored by the incremental
+    :class:`~repro.sched.incremental.PlacementScorer`: when one step moves,
+    only the per-location rows and comm-key index entries its placement
+    touches are patched, and the event schedule re-runs through the shared
+    array core — no re-encoding, no trace trees, bit-identical scores to
+    :func:`evaluate_placement` (differentially tested).  Under
+    ``objective="bytes"`` a candidate is first screened by its exact byte
+    delta and only simulated when it can actually improve the incumbent.
+
+    ``max_evals`` bounds the number of scored candidates (an *anytime*
+    search); the default policy scales it inversely with plan size so
+    refinement stays tractable at 10k steps.  Rule lists the scorer cannot
+    replay fall back to the original re-encode-per-candidate loop.
+    """
     network = network.bind(inst.locations)
+    locs = sorted(inst.locations)
+    movable = movable_steps(inst, pin)
+
+    try:
+        scorer = PlacementScorer(
+            inst, network, sizes=sizes, costs=costs, rules=rules
+        )
+    except UnsupportedRules:
+        return _refine_placement_tree(
+            inst, mapping, network, sizes=sizes, costs=costs,
+            objective=objective, pin=pin, max_rounds=max_rounds, rules=rules,
+            max_evals=max_evals,
+        )
+
+    def score(makespan: float, cross_bytes: int) -> tuple[float, float]:
+        if objective == "bytes":
+            return (float(cross_bytes), makespan)
+        return (makespan, float(cross_bytes))
+
+    current = dict(mapping)
+    scorer.reset(current)
+    if max_evals is None:
+        max_evals = _default_max_evals(scorer.action_count())
+    best_score = score(*scorer.score())
+    evals = 1
+    for _ in range(max_rounds):
+        improved = False
+        for s in movable:
+            home = current[s]
+            for l in locs:
+                if (l,) == home:
+                    continue
+                if evals >= max_evals:
+                    break
+                scorer.move(s, (l,))
+                evals += 1
+                if objective == "bytes":
+                    # Exact byte screen: if the primary key cannot improve,
+                    # skip the event schedule entirely.
+                    if scorer.cross_bytes_only() > best_score[0]:
+                        scorer.move(s, home)
+                        continue
+                cand = score(*scorer.score())
+                if cand < best_score:
+                    best_score = cand
+                    home = (l,)
+                    current[s] = (l,)
+                    improved = True
+                else:
+                    scorer.move(s, home)
+            if evals >= max_evals:
+                break
+        if not improved or evals >= max_evals:
+            break
+    best_sim = evaluate_placement(
+        inst, current, network, sizes=sizes, costs=costs, rules=rules
+    )
+    return current, best_sim
+
+
+def _refine_placement_tree(
+    inst: DistributedWorkflowInstance,
+    mapping: Placement,
+    network: NetworkModel,
+    *,
+    sizes: SizeModel,
+    costs: CostModel,
+    objective: str,
+    pin: Iterable[str],
+    max_rounds: int,
+    rules: tuple[str, ...],
+    max_evals: int | None = None,
+) -> tuple[Placement, Simulation]:
+    """The original re-encode-per-candidate loop (rule-list fallback).
+
+    An explicit ``max_evals`` caps candidate evaluations here too — the
+    per-candidate cost on this path is the superlinear one, so dropping the
+    caller's anytime budget would be worst exactly where it matters.  With
+    ``max_evals=None`` the loop is exhaustive (legacy behaviour; this
+    fallback is only reached for custom rule lists).
+    """
     locs = sorted(inst.locations)
     movable = movable_steps(inst, pin)
 
@@ -237,6 +352,8 @@ def refine_placement(
         inst, current, network, sizes=sizes, costs=costs, rules=rules
     )
     best_score = score(best_sim)
+    evals = 1
+    exhausted = False
     for _ in range(max_rounds):
         improved = False
         for s in movable:
@@ -244,7 +361,11 @@ def refine_placement(
             for l in locs:
                 if (l,) == home:
                     continue
+                if max_evals is not None and evals >= max_evals:
+                    exhausted = True
+                    break
                 current[s] = (l,)
+                evals += 1
                 sim = evaluate_placement(
                     inst, current, network,
                     sizes=sizes, costs=costs, rules=rules,
@@ -254,7 +375,9 @@ def refine_placement(
                     home = (l,)
                     improved = True
             current[s] = home
-        if not improved:
+            if exhausted:
+                break
+        if not improved or exhausted:
             break
     return current, best_sim
 
@@ -269,8 +392,14 @@ def auto_placement(
     refine: bool = True,
     pin: Iterable[str] = (),
     rules: tuple[str, ...] = ("R1R2",),
+    max_evals: int | None = None,
 ) -> ScheduleReport:
-    """Greedy + (optional) local search, reported against round-robin."""
+    """Greedy + (optional) local search, reported against round-robin.
+
+    ``max_evals`` bounds the refinement's candidate evaluations (see
+    :func:`refine_placement`); the default policy keeps search cost
+    near-constant across plan sizes.
+    """
     if objective not in ("makespan", "bytes"):
         raise ValueError(
             f"objective must be 'makespan' or 'bytes', got {objective!r}"
@@ -287,7 +416,7 @@ def auto_placement(
         mapping, predicted = refine_placement(
             inst, mapping, network,
             sizes=sizes, costs=costs, objective=objective, pin=pin,
-            rules=rules,
+            rules=rules, max_evals=max_evals,
         )
     else:
         predicted = evaluate_placement(

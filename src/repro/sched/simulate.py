@@ -150,6 +150,97 @@ def _collect_nodes(location: str, trace: Trace, start_id: int) -> list[_Node]:
     return nodes
 
 
+def run_event_schedule(
+    preds: list,
+    durations: list[float],
+    exec_locations: list,
+    comm_edges: Mapping[int, tuple[int, float]],
+    exec_slots: int | None,
+    locations,
+) -> tuple[list[float], list[float], list, int]:
+    """Event-driven longest path / list scheduling over plain arrays.
+
+    The shared core behind :func:`simulate` and the placement search's
+    incremental scorer (:mod:`repro.sched.incremental`): event ``i`` has
+    predecessor ids ``preds[i]``, runs for ``durations[i]`` seconds, and —
+    when it is a (possibly multi-location) exec — occupies one slot on each
+    of ``exec_locations[i]`` (``None`` marks comm events, which never
+    contend).  ``comm_edges[recv] = (send, transfer_s)`` adds the transfer
+    latency on exactly that edge.  Ties break on event id, so callers that
+    construct events in the same order get bit-identical schedules.
+
+    Returns ``(start, finish, crit_pred, unfinished)``; a non-empty
+    ``unfinished`` (event ids never scheduled) means a cyclic wait — the
+    caller decides how to report it.
+    """
+    n_events = len(preds)
+    indeg = [len(p) for p in preds]
+    succs: dict[int, list[int]] = {}
+    for eid, ps in enumerate(preds):
+        for p in ps:
+            succs.setdefault(p, []).append(eid)
+
+    ready = [0.0] * n_events
+    crit_pred: list[int | None] = [None] * n_events
+    start = [0.0] * n_events
+    finish = [0.0] * n_events
+    slot_free: dict[str, list[float]] = {}
+    single_free: dict[str, float] = {}
+    single_slot = exec_slots == 1  # scalar fast path: one worker per machine
+    if exec_slots is not None:
+        if exec_slots < 1:
+            raise ValueError(f"exec_slots must be >= 1: {exec_slots}")
+        if single_slot:
+            single_free = {loc: 0.0 for loc in locations}
+        else:
+            slot_free = {loc: [0.0] * exec_slots for loc in locations}
+
+    heap: list[tuple[float, int]] = [
+        (0.0, eid) for eid in range(n_events) if indeg[eid] == 0
+    ]
+    heapq.heapify(heap)
+    done = 0
+    while heap:
+        _, eid = heapq.heappop(heap)
+        t = ready[eid]
+        ev_locs = exec_locations[eid]
+        if ev_locs is not None and exec_slots is not None:
+            if single_slot:
+                for loc in ev_locs:
+                    busy_until = single_free[loc]
+                    if busy_until > t:
+                        t = busy_until
+                end = t + durations[eid]
+                for loc in ev_locs:
+                    single_free[loc] = end
+            else:
+                for loc in ev_locs:
+                    t = max(t, min(slot_free[loc]))
+                end = t + durations[eid]
+                for loc in ev_locs:
+                    free = slot_free[loc]
+                    free[free.index(min(free))] = end
+        start[eid] = t
+        fin = finish[eid] = t + durations[eid]
+        done += 1
+        for s in succs.get(eid, ()):
+            weight = 0.0
+            edge = comm_edges.get(s)
+            if edge is not None and edge[0] == eid:
+                weight = edge[1]
+            cand = fin + weight
+            if cand >= ready[s]:
+                ready[s] = cand
+                crit_pred[s] = eid
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(heap, (ready[s], s))
+    unfinished = (
+        [] if done == n_events else [e for e in range(n_events) if indeg[e] > 0]
+    )
+    return start, finish, crit_pred, unfinished
+
+
 def simulate(
     system: WorkflowSystem,
     *,
@@ -266,57 +357,19 @@ def simulate(
                 bytes_by_pair[pair] = bytes_by_pair.get(pair, 0) + nbytes
                 comm_seconds += transfer
 
-    # 4. Event-driven longest path (list scheduling when exec_slots is set).
+    # 4. Event-driven longest path (list scheduling when exec_slots is set),
+    #    via the shared array core.
     n_events = len(events)
-    indeg = [len(ev.preds) for ev in events]
-    succs: dict[int, list[int]] = {}
-    for ev in events:
-        for p in ev.preds:
-            succs.setdefault(p, []).append(ev.eid)
-
-    ready = [0.0] * n_events
-    crit_pred: list[int | None] = [None] * n_events
-    start = [0.0] * n_events
-    finish = [0.0] * n_events
-    slot_free: dict[str, list[float]] = {}
-    if exec_slots is not None:
-        if exec_slots < 1:
-            raise ValueError(f"exec_slots must be >= 1: {exec_slots}")
-        slot_free = {
-            loc: [0.0] * exec_slots for loc in system.locations()
-        }
-
-    heap: list[tuple[float, int]] = [
-        (0.0, ev.eid) for ev in events if indeg[ev.eid] == 0
-    ]
-    heapq.heapify(heap)
-    done = 0
-    while heap:
-        _, eid = heapq.heappop(heap)
-        ev = events[eid]
-        t = ready[eid]
-        if ev.kind == "exec" and exec_slots is not None:
-            for loc in ev.locations:
-                t = max(t, min(slot_free[loc]))
-            for loc in ev.locations:
-                free = slot_free[loc]
-                free[free.index(min(free))] = t + ev.duration
-        start[eid] = t
-        finish[eid] = t + ev.duration
-        done += 1
-        for s in succs.get(eid, ()):
-            weight = 0.0
-            if s in comm_edges and comm_edges[s][0] == eid:
-                weight = comm_edges[s][1]
-            cand = finish[eid] + weight
-            if cand >= ready[s]:
-                ready[s] = cand
-                crit_pred[s] = eid
-            indeg[s] -= 1
-            if indeg[s] == 0:
-                heapq.heappush(heap, (ready[s], s))
-    if done < n_events:
-        stuck = [ev.label for ev in events if indeg[ev.eid] > 0][:5]
+    start, finish, crit_pred, unfinished = run_event_schedule(
+        [ev.preds for ev in events],
+        [ev.duration for ev in events],
+        [ev.locations if ev.kind == "exec" else None for ev in events],
+        comm_edges,
+        exec_slots,
+        system.locations(),
+    )
+    if unfinished:
+        stuck = [events[eid].label for eid in unfinished[:5]]
         raise SimulationError(
             "cyclic channel wait — the plan cannot be replayed; "
             f"stuck events include {stuck}"

@@ -1,0 +1,216 @@
+"""Flat indexed trace IR: round-trip and flat-vs-tree engine equivalence.
+
+The flat engines (``repro.core.flat``) are the production rewriting path;
+the recursive tree walkers are kept as the reference oracle.  This suite
+pins the contract:
+
+* ``tree → flat → tree`` is the identity (raw node-for-node) while nothing
+  is deleted, and ``encode_flat(I).to_system() == encode(I)`` exactly;
+* the flat R1R2/R3 engines produce systems **equal** to the reference
+  engines with **identical** ``OptimizationStats`` — on a seeded sweep of
+  random layered DAGs, on the named workloads, and under hypothesis (which
+  additionally shrinks failures);
+* the R3 stats account one removed predicate per side: the send at its
+  source location and the recv at its destination (the historical
+  accounting bumped only the source, and only once per pair).
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+from conftest import given, instances, settings
+
+from repro.core import (
+    encode,
+    encode_flat,
+    rewrite_flat_pipeline,
+    rewrite_spatial,
+    rewrite_spatial_tree,
+    rewrite_system,
+    rewrite_system_tree,
+)
+from repro.core.flat import FlatSystem, FlatTrace
+from repro.core.parser import parse_system
+from repro.core.randgen import random_layered_instance
+from repro.core.syntax import (
+    NIL,
+    Exec,
+    Nil,
+    Par,
+    Recv,
+    Send,
+    Seq,
+    config,
+    par,
+    seq,
+    system,
+)
+from repro.core.translate import TrainPipelineTranslator, genomes_1000
+from test_differential import random_instance
+
+N_SEEDS = 60
+
+
+def _assert_engines_agree(w, *, rules=("R1R2", "R3")):
+    """Flat and tree engines must return equal systems and equal stats."""
+    sys_t = w
+    stats_t = []
+    tree = {"R1R2": rewrite_system_tree, "R3": rewrite_spatial_tree}
+    for rule in rules:
+        sys_t, st = tree[rule](sys_t)
+        stats_t.append(st)
+    sys_f = w
+    stats_f = []
+    flat = {"R1R2": rewrite_system, "R3": rewrite_spatial}
+    for rule in rules:
+        sys_f, sf = flat[rule](sys_f)
+        stats_f.append(sf)
+    assert sys_f == sys_t
+    assert stats_f == stats_t
+    # The single-flatten pipeline must agree with rule-at-a-time rewriting.
+    pipe_sys, pipe_stats = rewrite_flat_pipeline(w, tuple(rules))
+    assert pipe_sys == sys_t
+    assert pipe_stats == stats_t
+
+
+# ---------------------------------------------------------------------------
+# Round-trip
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    def test_exact_identity_on_handcrafted_trees(self):
+        ex = Exec("s", frozenset({"a"}), frozenset({"b"}), ("l",))
+        cases = [
+            NIL,
+            ex,
+            seq(Recv("p", "l1", "l"), ex, Send("b", "q", "l", "l2")),
+            par(seq(ex, ex), Recv("p", "l1", "l")),
+            # raw (non-smart-constructor) shapes must survive verbatim
+            Seq((Nil(), ex, Par((ex, Nil())))),
+        ]
+        for t in cases:
+            assert FlatTrace.from_trace(t).to_trace() == t
+
+    def test_exact_identity_on_random_encoded_systems(self):
+        for seed in range(N_SEEDS):
+            w = encode(random_instance(random.Random(seed)))
+            assert FlatSystem.from_system(w).to_system() == w
+
+    def test_to_trace_refuses_after_deletion(self):
+        ft = FlatTrace.from_trace(seq(Recv("p", "a", "a"), Recv("q", "b", "a")))
+        ft.alive[0] = False
+        with pytest.raises(ValueError, match="deleted"):
+            ft.to_trace()
+        assert ft.rebuild() == Recv("q", "b", "a")
+
+    def test_encode_flat_matches_encode(self):
+        for seed in range(N_SEEDS):
+            inst = random_instance(random.Random(seed))
+            assert encode_flat(inst).to_system() == encode(inst)
+        for inst in (
+            genomes_1000(n=4, m=3, a=2, b=2, c=2),
+            TrainPipelineTranslator(n_pods=3).instance(),
+            random_layered_instance(300, n_locations=4, seed=7, p_spatial=0.3),
+        ):
+            assert encode_flat(inst).to_system() == encode(inst)
+
+
+# ---------------------------------------------------------------------------
+# Differential: flat engines vs recursive reference engines
+# ---------------------------------------------------------------------------
+
+
+class TestSeededDifferential:
+    @pytest.mark.parametrize("chunk", range(6))
+    def test_random_dags(self, chunk):
+        for i in range(N_SEEDS // 6):
+            rng = random.Random(97 * chunk + i)
+            w = encode(random_instance(rng))
+            _assert_engines_agree(w, rules=("R1R2",))
+            _assert_engines_agree(w, rules=("R1R2", "R3"))
+            _assert_engines_agree(w, rules=("R3",))
+
+    def test_named_workloads(self):
+        for inst in (
+            genomes_1000(n=4, m=3, a=2, b=2, c=2),
+            TrainPipelineTranslator(n_pods=3).instance(),
+        ):
+            _assert_engines_agree(encode(inst))
+
+    def test_large_layered_dag(self):
+        inst = random_layered_instance(400, n_locations=4, seed=3, p_spatial=0.4)
+        _assert_engines_agree(encode(inst))
+
+    def test_flat_rewrite_idempotent(self):
+        w = encode(genomes_1000(n=4, m=3, a=2, b=2, c=2))
+        o1, s1 = rewrite_system(w)
+        o2, s2 = rewrite_system(o1)
+        assert o1 == o2
+        assert s2.removed == 0
+
+    def test_parsed_system(self):
+        w = parse_system(
+            "<l,{},recv(p,l1,l).exec(s,{d}->{d1},{l})."
+            "(send(d1->p1,l,lp) | send(d1->p1,l,lp))>"
+            " | <lp,{},recv(p1,l,lp).exec(s1,{d1}->{},{lp})"
+            " | recv(p1,l,lp).exec(s2,{d1}->{},{lp})>"
+        )
+        _assert_engines_agree(w, rules=("R1R2",))
+
+
+class TestHypothesisDifferential:
+    @given(inst=instances(max_layers=4, max_width=3, max_locations=3))
+    @settings(max_examples=30, deadline=None)
+    def test_engines_agree(self, inst):
+        w = encode(inst)
+        _assert_engines_agree(w, rules=("R1R2",))
+        _assert_engines_agree(w, rules=("R1R2", "R3"))
+
+    @given(inst=instances(max_layers=3, max_width=3, max_locations=4))
+    @settings(max_examples=25, deadline=None)
+    def test_round_trip(self, inst):
+        w = encode(inst)
+        assert FlatSystem.from_system(w).to_system() == w
+        assert encode_flat(inst).to_system() == w
+
+
+# ---------------------------------------------------------------------------
+# R3 stats accounting (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+class TestR3StatsAccounting:
+    def _spatial_pair_system(self):
+        """s runs jointly on a and b; each re-broadcasts its output to the
+        other — both send/recv pairs are R3-redundant."""
+        return parse_system(
+            "<a,{x},exec(s,{x}->{d},{a,b}).send(d->p,a,b)"
+            " | recv(p,b,a).exec(t,{d}->{},{a})>"
+            " | <b,{x},exec(s,{x}->{d},{a,b}).send(d->p,b,a)"
+            " | recv(p,a,b).exec(u,{d}->{},{b})>"
+        )
+
+    @pytest.mark.parametrize(
+        "engine", [rewrite_spatial, rewrite_spatial_tree]
+    )
+    def test_counts_send_at_src_and_recv_at_dst(self, engine):
+        o, stats = engine(self._spatial_pair_system())
+        assert o.comm_count() == 0
+        # Two pairs removed: a→b and b→a.  Each pair is one send predicate
+        # at its source plus one recv predicate at its destination.
+        assert stats.removed_duplicate == 4
+        assert stats.by_location == {"a": 2, "b": 2}
+
+    def test_by_location_total_matches_removed(self):
+        for seed in range(20):
+            w = encode(
+                random_layered_instance(
+                    60, n_locations=3, seed=seed, p_spatial=0.4
+                )
+            )
+            o, _ = rewrite_system(w)
+            _, stats = rewrite_spatial(o)
+            assert sum(stats.by_location.values()) == stats.removed

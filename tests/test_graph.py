@@ -66,6 +66,17 @@ class TestDef1to2:
         with pytest.raises(ValueError, match="cycle"):
             w.topological_steps()
 
+    def test_multi_port_edge_between_same_pair_is_not_a_cycle(self):
+        # One producer feeding one consumer through TWO ports is a single
+        # completion event, not two — the per-(port, producer) in-degree
+        # counting used to leave b's counter positive forever and
+        # misreport this acyclic DAG as cyclic.
+        w = make_workflow(
+            ["a", "b"], ["p", "q"],
+            [("a", "p"), ("a", "q"), ("p", "b"), ("q", "b")],
+        )
+        assert w.topological_steps() == ("a", "b")
+
 
 class TestDef3to4:
     def test_in_out_data(self):
