@@ -16,6 +16,9 @@ Prints ``name,value,unit,derived`` CSV rows.  Sections:
   on random layered DAGs at 100/1k/2k/10k steps, recursive tree engine vs
   the flat indexed IR, plus ``auto_placement`` on a 500-step DAG (the
   incremental placement scorer);
+* ``serve``     — compile-once/run-many serving throughput: 100 workflow
+  instances over one lowered program (``Executable.run_many``, shared
+  transport) vs the naive per-instance trace→lower→compile→run loop;
 * ``bisim``     — LTS sizes + exact bisimulation check time (Thm. 1);
 * ``kernels``   — Pallas kernels (interpret mode) vs jnp references;
 * ``train``     — SWIRL-planned trainer steps/s (smoke config);
@@ -299,6 +302,108 @@ def bench_compile() -> None:
     )
 
 
+def bench_serve() -> None:
+    """Compile-once/run-many serving throughput (instances/sec).
+
+    100 workflow instances through the threaded backend, two ways:
+
+    * *per-instance* — the naive serving loop: every instance pays the full
+      trace → optimize → lower → compile → run pipeline;
+    * *run-many* — one ``trace → optimize → lower → compile`` then
+      ``Executable.run_many`` over the same lowered program IR with a
+      shared transport and a bounded instance pool.
+
+    Acceptance: run-many ≥ 5× instances/sec vs per-instance.
+    """
+    from repro import swirl
+    from repro.core.graph import DistributedWorkflowInstance, make_workflow
+
+    n_instances = 100
+
+    # A serving-shaped workflow: a source step consumes the per-request
+    # seed datum, fans out to two parallel workers, and a sink aggregates.
+    wf = make_workflow(
+        ["ingest", "work_a", "work_b", "merge"],
+        ["p_seed", "p_ingest", "p_a", "p_b"],
+        [
+            ("p_seed", "ingest"),
+            ("ingest", "p_ingest"),
+            ("p_ingest", "work_a"),
+            ("p_ingest", "work_b"),
+            ("work_a", "p_a"),
+            ("work_b", "p_b"),
+            ("p_a", "merge"),
+            ("p_b", "merge"),
+        ],
+    )
+    inst = DistributedWorkflowInstance(
+        workflow=wf,
+        locations=frozenset({"l0", "l1", "l2"}),
+        mapping={
+            "ingest": ("l0",),
+            "work_a": ("l1",),
+            "work_b": ("l2",),
+            "merge": ("l0",),
+        },
+        data=frozenset({"d_seed", "d_ingest", "d_a", "d_b"}),
+        placement={
+            "d_seed": "p_seed",
+            "d_ingest": "p_ingest",
+            "d_a": "p_a",
+            "d_b": "p_b",
+        },
+        initial_data={"l0": frozenset({"d_seed"})},
+    )
+    fns = {
+        "ingest": lambda i: {"d_ingest": i["d_seed"] * 2},
+        "work_a": lambda i: {"d_a": i["d_ingest"] + 1},
+        "work_b": lambda i: {"d_b": i["d_ingest"] + 2},
+        "merge": lambda i: {},
+    }
+    inputs = [{("l0", "d_seed"): i} for i in range(n_instances)]
+
+    def per_instance():
+        results = []
+        for payloads in inputs:
+            results.append(
+                swirl.trace(inst)
+                .optimize()
+                .lower("threaded", timeout_s=60)
+                .compile(fns)
+                .run(initial_payloads=payloads)
+            )
+        return results
+
+    def run_many():
+        exe = (
+            swirl.trace(inst)
+            .optimize()
+            .lower("threaded", timeout_s=60)
+            .compile(fns)
+        )
+        return exe.run_many(inputs, max_concurrent=8)
+
+    dt_per, res_per = _t(per_instance, repeat=1)
+    dt_many, res_many = _t(run_many, repeat=1)
+    assert [r.data for r in res_many] == [r.data for r in res_per], (
+        "run-many results diverged from per-instance runs — do not compare"
+    )
+    ips_per = n_instances / dt_per
+    ips_many = n_instances / dt_many
+    row(
+        "serve/per_instance_ips", f"{ips_per:.1f}", "instances/s",
+        f"{n_instances} x trace->optimize->lower->compile->run",
+    )
+    row(
+        "serve/run_many_ips", f"{ips_many:.1f}", "instances/s",
+        f"{n_instances} instances, compile-once, max_concurrent=8",
+    )
+    row(
+        "serve/speedup", f"{ips_many / ips_per:.1f}", "x",
+        "target >= 5x (acceptance)",
+    )
+
+
 def bench_bisim() -> None:
     from repro.core import encode, rewrite_system, weak_barbed_bisimilar
     from repro.core.semantics import reachable_states
@@ -380,6 +485,7 @@ SECTIONS = {
     "dist": bench_dist,
     "sched": bench_sched,
     "compile": bench_compile,
+    "serve": bench_serve,
     "bisim": bench_bisim,
     "kernels": bench_kernels,
     "train": bench_train,

@@ -11,7 +11,7 @@ import time
 import numpy as np
 
 from repro import swirl
-from repro.core.compile import build_bundles, emit_python_source
+from repro.exec import emit_location_source
 from repro.core.translate import genomes_1000
 
 # n individuals over a locations; m mutation_overlap / frequency steps over
@@ -84,7 +84,8 @@ print(
     result2.location_data("l^MO_1").get("d^MO_1", "<reduced>"),
 )
 
-# Peek at one generated self-contained bundle (paper §5's compiler output).
-bundle = build_bundles(plan.system, make_fns())["l^IM"]
+# Peek at one generated self-contained bundle (paper §5's compiler output),
+# emitted straight from the per-location program IR.
+program = plan.exec_program()["l^IM"]
 print("\n--- generated bundle for l^IM (first 400 chars) ---")
-print(emit_python_source(bundle)[:400])
+print(emit_location_source(program)[:400])

@@ -20,6 +20,7 @@ _SUBMODULES = (
     "api",
     "backends",
     "core",
+    "exec",
     "sched",
     "swirl",
     "workflow",

@@ -5,9 +5,10 @@ SWIRL toolchain is staged as::
 
     trace   front-end description  → Plan        (encode ⟦·⟧, §3.2)
     optimize Plan                  → Plan        (rewriting ⟦·⟧, §4 + R3)
-    lower   Plan × backend/placement → Lowered   (backend selection)
+    lower   Plan × backend/placement → Lowered   (program IR + backend)
     compile Lowered × step bodies  → Executable  (runnable artifact)
     run     Executable             → ExecutionResult
+    run_many Executable × [inputs] → [ExecutionResult]  (compile-once serving)
 
 End to end::
 
@@ -74,7 +75,12 @@ __all__ = [
 
 
 class ConcurrentRunError(RuntimeError):
-    """A second run was started while the Executable was still running."""
+    """A second run was started while the Executable was still running.
+
+    Applies to whole runs: a :meth:`Executable.run` or a whole
+    :meth:`Executable.run_many` *batch* — the batch's internal instance
+    parallelism is not a re-entry and is never rejected.
+    """
 
 
 # ---------------------------------------------------------------------------
@@ -390,6 +396,24 @@ class Plan:
             self.__dict__["_placement"] = cached
         return dict(cached)
 
+    def exec_program(self):
+        """The plan lowered to the execution IR (:mod:`repro.exec`).
+
+        Computed once per plan and shared by every backend lowered from it
+        (the per-location op arrays are backend-agnostic), so fanning one
+        plan out to several backends — or compiling several Executables —
+        never re-derives the programs.
+        """
+        from repro.exec.program import lower_system
+
+        cached = self.__dict__.get("_exec_program")
+        if cached is None:
+            cached = lower_system(
+                self.system, schedule=self.schedule_report
+            )
+            self.__dict__["_exec_program"] = cached
+        return cached
+
     # -- scheduling ---------------------------------------------------------
     def schedule(
         self,
@@ -596,7 +620,12 @@ class Plan:
 
 @dataclass(frozen=True)
 class Lowered:
-    """A plan bound to a backend; :meth:`compile` attaches step bodies."""
+    """A plan bound to a backend; :meth:`compile` attaches step bodies.
+
+    The plan's per-location program IR (:meth:`Plan.exec_program`) is
+    shared by every ``Lowered``/``Executable`` derived from the same plan —
+    lowering is paid once, backends only attach their interpreter.
+    """
 
     plan: Plan
     backend_name: str
@@ -623,7 +652,9 @@ class Lowered:
                 spec if isinstance(spec, StepMeta) else StepMeta(fn=spec)
             )
         backend = get_backend(self.backend_name)
-        program = backend.compile(self.plan.system, metas, self.options)
+        program = backend.compile(
+            self.plan.exec_program(), metas, self.options
+        )
         return Executable(
             plan=self.plan,
             backend_name=self.backend_name,
@@ -638,12 +669,15 @@ class Lowered:
 
 @dataclass
 class Executable:
-    """A compiled workflow: run it (sync or async), snapshot it, resume it.
+    """A compiled workflow: run it (once or in batches), snapshot, resume.
 
-    One Executable owns one mutable :class:`BackendProgram`, so runs must
-    not overlap: a second :meth:`run`/:meth:`run_async` while one is in
-    flight raises :class:`ConcurrentRunError` (compile a second Executable
-    from the same :class:`Lowered` to run concurrently).
+    One Executable owns one mutable :class:`BackendProgram`, so *whole
+    runs* must not overlap: a second :meth:`run`/:meth:`run_async`/
+    :meth:`run_many` while one is in flight raises
+    :class:`ConcurrentRunError` (compile a second Executable from the same
+    :class:`Lowered` to run concurrently).  A :meth:`run_many` batch counts
+    as one run — its *internal* instance parallelism happens below the
+    guard and is never rejected.
     """
 
     plan: Plan
@@ -654,25 +688,56 @@ class Executable:
     )
     _running: bool = field(default=False, repr=False, compare=False)
 
+    def _enter_run(self, what: str) -> None:
+        with self._run_lock:
+            if self._running:
+                raise ConcurrentRunError(
+                    f"this Executable ({self.backend_name!r}) is already "
+                    f"running; an overlapping {what} would share one "
+                    "mutable BackendProgram — wait for the in-flight run, "
+                    "or compile() another Executable from the same Lowered"
+                )
+            self._running = True
+
+    def _exit_run(self) -> None:
+        with self._run_lock:
+            self._running = False
+
     def run(
         self,
         *,
         initial_payloads: Mapping[PayloadKey, Any] | None = None,
     ) -> ExecutionResult:
-        with self._run_lock:
-            if self._running:
-                raise ConcurrentRunError(
-                    f"this Executable ({self.backend_name!r}) is already "
-                    "running; overlapping runs would share one mutable "
-                    "BackendProgram — wait for the in-flight run, or "
-                    "compile() another Executable from the same Lowered"
-                )
-            self._running = True
+        self._enter_run("run")
         try:
             return self.program.run(initial_payloads)
         finally:
-            with self._run_lock:
-                self._running = False
+            self._exit_run()
+
+    def run_many(
+        self,
+        inputs: Sequence[Mapping[PayloadKey, Any] | None],
+        *,
+        max_concurrent: int = 8,
+    ) -> list[ExecutionResult]:
+        """Run one workflow instance per entry of ``inputs``, compile-once.
+
+        Every instance executes against this Executable's already-lowered
+        program — encode, rewrite, lower and compile are amortised across
+        the batch, transports are shared where the backend supports it, and
+        at most ``max_concurrent`` instances are in flight at a time.
+        Results come back in input order.  The whole batch holds the
+        re-entry guard: concurrent ``run_many`` batches (or a concurrent
+        :meth:`run`) on one Executable raise :class:`ConcurrentRunError`;
+        the batch's internal concurrency does not.
+        """
+        self._enter_run("run_many batch")
+        try:
+            return self.program.run_many(
+                list(inputs), max_concurrent=max_concurrent
+            )
+        finally:
+            self._exit_run()
 
     def run_async(
         self,

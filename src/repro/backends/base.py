@@ -1,9 +1,11 @@
 """The ``Backend`` protocol every execution target implements.
 
-A backend turns an (optimised) :class:`~repro.core.syntax.WorkflowSystem`
-plus a step registry into a :class:`BackendProgram` — the backend-specific
-compiled artifact behind :class:`repro.api.Executable`.  Four backends ship
-in-tree (see :mod:`repro.backends`):
+A backend turns a lowered :class:`~repro.exec.program.ExecProgram` — the
+per-location executable program IR of :mod:`repro.exec` — plus a step
+registry into a :class:`BackendProgram`, the backend-specific compiled
+artifact behind :class:`repro.api.Executable`.  Every in-tree backend is an
+interpreter over that one IR; none re-derives traces from the recursive
+tree form.  Four backends ship in-tree (see :mod:`repro.backends`):
 
 ======================  =====================================================
 ``inprocess``           reduction-driven :class:`repro.workflow.Runtime`
@@ -26,13 +28,18 @@ entry-point group declared in ``pyproject.toml``.
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Mapping
+from typing import Any, Mapping, Sequence
 
 from repro.core.compile import StepMeta
 from repro.core.syntax import WorkflowSystem
+from repro.exec.program import ExecProgram, ensure_program
 
 PayloadKey = tuple[str, str]  # (location, data element)
+
+#: Default bound on concurrently-executing instances in :meth:`run_many`.
+DEFAULT_MAX_CONCURRENT = 8
 
 
 class BackendCapabilityError(NotImplementedError):
@@ -66,17 +73,77 @@ class ExecutionResult:
 
 @dataclass
 class BackendProgram(ABC):
-    """A compiled, runnable artifact for one backend."""
+    """A compiled, runnable artifact for one backend.
 
-    system: WorkflowSystem
+    Holds the lowered :class:`~repro.exec.program.ExecProgram` the backend
+    interprets; ``system`` is the SWIRL term view of the same program
+    (reconstructed from the op arrays, cached).  Compiled once, a program
+    can be run many times — :meth:`run_many` executes a batch of workflow
+    instances against the same lowered artifact with a bounded pool.
+    """
+
+    program: ExecProgram
     steps: Mapping[str, StepMeta]
     options: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def system(self) -> WorkflowSystem:
+        return self.program.system
 
     @abstractmethod
     def run(
         self, initial_payloads: Mapping[PayloadKey, Any] | None = None
     ) -> ExecutionResult:
         ...
+
+    # -- compile-once / run-many ---------------------------------------------
+    def run_many(
+        self,
+        inputs: Sequence[Mapping[PayloadKey, Any] | None],
+        *,
+        max_concurrent: int = DEFAULT_MAX_CONCURRENT,
+    ) -> list[ExecutionResult]:
+        """Execute one workflow instance per entry of ``inputs``.
+
+        All instances interpret the *same* compiled program (encode /
+        rewrite / lower / compile are paid once); at most ``max_concurrent``
+        instances are in flight at a time.  Results are returned in input
+        order.  Backends override :meth:`_run_instance` when per-instance
+        isolation needs care (shared transports, mutable snapshot state).
+        """
+        inputs = list(inputs)
+        if max_concurrent < 1:
+            raise ValueError(
+                f"max_concurrent must be >= 1, got {max_concurrent}"
+            )
+        if not inputs:
+            return []
+        results: list[ExecutionResult | None] = [None] * len(inputs)
+        workers = min(max_concurrent, len(inputs))
+        with ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="swirl-run-many"
+        ) as pool:
+            futures = [
+                pool.submit(self._run_instance, payloads, str(i))
+                for i, payloads in enumerate(inputs)
+            ]
+            errors: list[BaseException] = []
+            for i, fut in enumerate(futures):
+                try:
+                    results[i] = fut.result()
+                except BaseException as e:  # noqa: BLE001
+                    errors.append(e)
+            if errors:
+                raise errors[0]
+        return results  # type: ignore[return-value]
+
+    def _run_instance(
+        self,
+        initial_payloads: Mapping[PayloadKey, Any] | None,
+        instance_tag: str,
+    ) -> ExecutionResult:
+        """Run one instance of a :meth:`run_many` batch (override-point)."""
+        return self.run(initial_payloads)
 
     # Optional capabilities — backends that support them override.
     def checkpoint(self):
@@ -104,11 +171,28 @@ class Backend(ABC):
     @abstractmethod
     def compile(
         self,
-        system: WorkflowSystem,
+        program: ExecProgram | WorkflowSystem,
         steps: Mapping[str, StepMeta],
         options: Mapping[str, Any],
     ) -> BackendProgram:
+        """Compile a lowered program (a bare system is lowered on entry).
+
+        Implementations call :meth:`lower` first so both an
+        :class:`~repro.exec.program.ExecProgram` (the staged pipeline) and
+        a :class:`WorkflowSystem` (legacy/third-party callers written
+        against the PR-1 signature) are accepted.
+        """
         ...
+
+    @staticmethod
+    def lower(
+        program: ExecProgram | WorkflowSystem,
+        options: Mapping[str, Any] | None = None,
+    ) -> ExecProgram:
+        """Coerce a ``compile`` source into the execution IR."""
+        return ensure_program(
+            program, schedule=(options or {}).get("schedule")
+        )
 
     def validate_options(self, options: Mapping[str, Any]) -> None:
         """Reject unknown lowering options early (override to extend)."""

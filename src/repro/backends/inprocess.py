@@ -1,20 +1,24 @@
-"""``inprocess`` backend — the reduction-driven, checkpointable Runtime.
+"""``inprocess`` backend — the centralised, checkpointable dataflow runtime.
 
-Execution *is* SWIRL reduction: the program repeatedly applies the paper's
-(EXEC)/(COMM) rules with real effects on a thread pool.  This is the backend
-with the richest fault-tolerance story (retry, straggler speculation,
-heartbeats, consistent snapshots), so it also implements the optional
-``checkpoint``/``restore`` capability.
+Interprets the per-location program IR (:mod:`repro.exec`) with the
+semantics' enabling rules — matching SEND/RECV pairs fire as (COMM) copies,
+EXEC ops fire synchronised across ``M(s)`` — with real effects on a thread
+pool.  This is the backend with the richest fault-tolerance story (retry,
+straggler speculation, heartbeats, consistent snapshots), so it also
+implements the optional ``checkpoint``/``restore`` capability; snapshots
+are still reachable SWIRL terms (the remaining term is rebuilt from the
+program's completion flags), interchangeable with every other
+checkpointing backend.
 """
 
 from __future__ import annotations
 
 from typing import Any, Mapping
 
-from repro._compat import suppress_deprecations
 from repro.core.compile import StepMeta
 from repro.core.parser import dumps
 from repro.core.syntax import WorkflowSystem
+from repro.exec.program import ExecProgram, lower_system
 
 from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
 
@@ -24,41 +28,73 @@ class InprocessProgram(BackendProgram):
     _runtime = None
     _pending_ckpt = None
 
-    def run(
-        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
-    ) -> ExecutionResult:
-        from repro.workflow.runtime import Runtime
+    def _build_runtime(
+        self,
+        initial_payloads: Mapping[PayloadKey, Any] | None,
+        *,
+        program: ExecProgram | None = None,
+        completed: frozenset[str] = frozenset(),
+    ):
+        from repro.exec.central import ProgramRuntime
 
-        step_fns = {name: meta.fn for name, meta in self.steps.items()}
         expected = {
             name: meta.expected_seconds
             for name, meta in self.steps.items()
             if meta.expected_seconds is not None
         }
         kwargs = dict(self.options)
-        kwargs.pop("schedule", None)  # placement already baked into the system
+        kwargs.pop("schedule", None)  # placement already baked into the IR
         kwargs.setdefault("expected_s", expected or None)
-        with suppress_deprecations():
-            if self._pending_ckpt is not None:
-                rt = Runtime.restore(self._pending_ckpt, step_fns, **kwargs)
-                if initial_payloads:
-                    rt.payloads.update(initial_payloads)
-                self._pending_ckpt = None
-            else:
-                rt = Runtime(
-                    self.system,
-                    step_fns,
-                    initial_payloads=initial_payloads,
-                    **kwargs,
-                )
-            self._runtime = rt
-            stats = rt.run()
+        return ProgramRuntime(
+            program or self.program,
+            dict(self.steps),
+            initial_payloads=initial_payloads,
+            completed=completed,
+            **kwargs,
+        )
+
+    def run(
+        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
+    ) -> ExecutionResult:
+        if self._pending_ckpt is not None:
+            ckpt, self._pending_ckpt = self._pending_ckpt, None
+            # Resume from the snapshot's remaining term: re-lower it and
+            # replay completed steps' recorded outputs instead of redoing.
+            payloads = dict(ckpt.payloads)
+            payloads.update(initial_payloads or {})
+            rt = self._build_runtime(
+                payloads,
+                program=lower_system(ckpt.system),
+                completed=frozenset(ckpt.completed_execs),
+            )
+        else:
+            rt = self._build_runtime(initial_payloads)
+        self._runtime = rt
+        stats = rt.run()
+        return ExecutionResult(
+            backend="inprocess", data=self._collect(rt), stats=stats
+        )
+
+    def _run_instance(
+        self,
+        initial_payloads: Mapping[PayloadKey, Any] | None,
+        instance_tag: str,
+    ) -> ExecutionResult:
+        # run_many instances each get a pristine runtime; the shared
+        # snapshot state (_runtime/_pending_ckpt) is left untouched.
+        rt = self._build_runtime(initial_payloads)
+        stats = rt.run()
+        return ExecutionResult(
+            backend="inprocess", data=self._collect(rt), stats=stats
+        )
+
+    def _collect(self, rt) -> dict[str, dict[str, Any]]:
         data: dict[str, dict[str, Any]] = {
             loc: {} for loc in self.system.locations()
         }
         for (loc, d), v in rt.payloads.items():
             data.setdefault(loc, {})[d] = v
-        return ExecutionResult(backend="inprocess", data=data, stats=stats)
+        return data
 
     def checkpoint(self):
         from repro.workflow.runtime import Checkpoint
@@ -95,12 +131,14 @@ class InprocessBackend(Backend):
 
     def compile(
         self,
-        system: WorkflowSystem,
+        program: ExecProgram | WorkflowSystem,
         steps: Mapping[str, StepMeta],
         options: Mapping[str, Any],
     ) -> InprocessProgram:
         return InprocessProgram(
-            system=system, steps=dict(steps), options=dict(options)
+            program=self.lower(program, options),
+            steps=dict(steps),
+            options=dict(options),
         )
 
 

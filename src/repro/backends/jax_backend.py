@@ -1,13 +1,15 @@
-"""``jax`` backend — lower location traces onto a JAX host device mesh.
+"""``jax`` backend — interpret location programs on a JAX host device mesh.
 
 Each SWIRL location is pinned to a JAX device (round-robin over the host
-mesh, or an explicit ``devices=`` option).  The program then *reduces* the
-system deterministically:
+mesh, or an explicit ``devices=`` option).  The compiled artifact then
+interprets the per-location program IR deterministically:
 
-* (EXEC) runs the step function with its inputs resident on the leader
-  location's device and replicates ``Out^D(s)`` onto every device of
-  ``M(s)`` — the rule's "add to every ``D_i``" becomes ``jax.device_put``;
-* (COMM) moves the payload to the destination location's device.
+* an enabled ``ExecOp`` runs the step function with its inputs resident on
+  the leader location's device and replicates ``Out^D(s)`` onto every
+  device of ``M(s)`` — the (EXEC) rule's "add to every ``D_i``" becomes
+  ``jax.device_put``;
+* a matching ``SendOp``/``RecvOp`` pair moves the payload to the
+  destination location's device — (COMM) as a device-to-device copy.
 
 Only array payloads (``jax.Array`` / ``numpy.ndarray``) are staged through
 the device API; plain Python payloads are copied by reference, so results
@@ -22,13 +24,9 @@ from __future__ import annotations
 from typing import Any, Mapping
 
 from repro.core.compile import StepMeta
-from repro.core.semantics import (
-    CommTransition,
-    ExecTransition,
-    apply_transition,
-    enabled_transitions,
-)
 from repro.core.syntax import WorkflowSystem
+from repro.exec.interp import Cursor, enabled_exec_picks, first_enabled_comm
+from repro.exec.program import ExecProgram
 
 from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
 
@@ -48,7 +46,7 @@ class JaxMeshProgram(BackendProgram):
         if devices is None:
             platform = self.options.get("platform")
             devices = jax.devices(platform) if platform else jax.devices()
-        locs = sorted(self.system.locations())
+        locs = sorted(self.program.locations())
         schedule = self.options.get("schedule")
         if schedule is not None and getattr(schedule, "network", None):
             # Placement scheduler hand-down: keep each network group's
@@ -87,69 +85,72 @@ class JaxMeshProgram(BackendProgram):
         for (loc, d), v in (initial_payloads or {}).items():
             payloads[(loc, d)] = place(loc, v)
 
-        state = self.system
+        cursors = {
+            lp.location: Cursor(lp) for lp in self.program.programs
+        }
+        data = {lp.location: set(lp.data) for lp in self.program.programs}
+        order = sorted(cursors)
+
+        def fire_one_comm() -> bool:
+            hit = first_enabled_comm(cursors, data, order)
+            if hit is None:
+                return False
+            op, src, i, j = hit
+            cursors[src].complete(i)
+            cursors[op.dst].complete(j)
+            data[op.dst].add(op.data)
+            payloads[(op.dst, op.data)] = place(
+                op.dst, payloads[(op.src, op.data)]
+            )
+            stats["comms"] += 1
+            return True
+
         max_rounds = int(self.options.get("max_rounds", 1_000_000))
         for _ in range(max_rounds):
             progressed = False
             # Drain communications first (they are τ — silent, confluent).
-            while True:
-                comm = next(
-                    (
-                        t
-                        for t in enabled_transitions(state)
-                        if isinstance(t, CommTransition)
-                    ),
-                    None,
-                )
-                if comm is None:
-                    break
-                s = comm.send
-                state = apply_transition(state, comm)
-                payloads[(s.dst, s.data)] = place(
-                    s.dst, payloads[(s.src, s.data)]
-                )
-                stats["comms"] += 1
+            while fire_one_comm():
                 progressed = True
+            # Deterministic firing order: lowest step name first.
             execs = sorted(
-                (
-                    t
-                    for t in enabled_transitions(state)
-                    if isinstance(t, ExecTransition)
-                ),
-                key=lambda t: t.action.step,
+                enabled_exec_picks(cursors, data, order),
+                key=lambda pair: pair[0].step,
             )
             if execs:
-                act = execs[0].action
-                leader = sorted(act.locations)[0]
-                inputs = {
-                    d: payloads[(leader, d)] for d in sorted(act.inputs)
-                }
-                out = self.steps[act.step].fn(inputs)
-                missing = act.outputs - set(out)
+                op, picks = execs[0]
+                leader = min(op.locations)
+                inputs = {d: payloads[(leader, d)] for d in op.inputs}
+                out = self.steps[op.step].fn(inputs)
+                missing = set(op.outputs) - set(out)
                 if missing:
                     raise RuntimeError(
-                        f"step {act.step!r} did not produce {sorted(missing)}"
+                        f"step {op.step!r} did not produce {sorted(missing)}"
                     )
-                state = apply_transition(state, execs[0])
-                for loc in act.locations:
-                    for d in act.outputs:
+                for loc, i in picks:
+                    cursors[loc].complete(i)
+                    data[loc].update(op.outputs)
+                    for d in op.outputs:
                         payloads[(loc, d)] = place(loc, out[d])
                 stats["execs"] += 1
                 progressed = True
             if not progressed:
                 break
 
-        if not state.is_terminated():
+        if not all(c.finished() for c in cursors.values()):
+            remaining = self.program.remaining_system(
+                {l: c.done_flags() for l, c in cursors.items()},
+                {l: frozenset(d) for l, d in data.items()},
+            )
             raise RuntimeError(
                 "jax backend: workflow did not terminate; remaining:\n"
-                + state.pretty()
+                + remaining.pretty()
             )
-        data: dict[str, dict[str, Any]] = {
-            loc: {} for loc in self.system.locations()
+        result: dict[str, dict[str, Any]] = {
+            loc: {} for loc in self.program.locations()
         }
         for (loc, d), v in payloads.items():
-            data.setdefault(loc, {})[d] = v
-        return ExecutionResult(backend="jax", data=data, stats=stats)
+            result.setdefault(loc, {})[d] = v
+        return ExecutionResult(backend="jax", data=result, stats=stats)
 
 
 class JaxBackend(Backend):
@@ -163,12 +164,14 @@ class JaxBackend(Backend):
 
     def compile(
         self,
-        system: WorkflowSystem,
+        program: ExecProgram | WorkflowSystem,
         steps: Mapping[str, StepMeta],
         options: Mapping[str, Any],
     ) -> JaxMeshProgram:
         return JaxMeshProgram(
-            system=system, steps=dict(steps), options=dict(options)
+            program=self.lower(program, options),
+            steps=dict(steps),
+            options=dict(options),
         )
 
 

@@ -1,7 +1,9 @@
 """``multiprocess`` backend — one OS process per SWIRL location (group).
 
 This is the paper's deployment model made real inside one machine: every
-location's compiled bundle runs in its *own operating-system process* and
+location's lowered program (:class:`~repro.exec.program.LocationProgram` —
+the self-contained, picklable op array shipped to the worker) runs in its
+*own operating-system process* and
 COMM messages cross a genuine transport boundary (the ``socket`` transport
 of :mod:`repro.workflow.transport` — ``multiprocessing.connection`` sockets
 with pickle framing, per-message acks, and resend on ack timeout).  There
@@ -58,9 +60,10 @@ import warnings
 from dataclasses import replace
 from typing import Any, Mapping, Sequence
 
-from repro.core.compile import StepMeta, build_bundles
+from repro.core.compile import StepMeta
 from repro.core.parser import dumps
 from repro.core.syntax import Exec, WorkflowSystem, actions
+from repro.exec.program import ExecProgram, LocationProgram
 
 from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
 
@@ -106,7 +109,7 @@ class WorkerFailedError(RuntimeError):
 
 
 def assign_workers(
-    system: WorkflowSystem,
+    system: ExecProgram | WorkflowSystem,
     *,
     workers: int | None = None,
     schedule: Any = None,
@@ -118,8 +121,26 @@ def assign_workers(
     ``ScheduleReport`` is given, locations in the same network group are
     pinned together.  ``workers=N`` then packs the groups onto ``N``
     processes, largest-first onto the least-loaded process.
+
+    Accepts the lowered :class:`~repro.exec.program.ExecProgram` (the
+    backend path, read straight off the op arrays) or a bare
+    :class:`WorkflowSystem` (legacy callers).
     """
-    locs = sorted(system.locations())
+    if isinstance(system, ExecProgram):
+        locs = sorted(system.locations())
+        spatial = [
+            tuple(sorted(ls))
+            for ls in system.placement().values()
+            if len(ls) > 1
+        ]
+    else:
+        locs = sorted(system.locations())
+        spatial = [
+            tuple(sorted(a.locations))
+            for cfg in system.configs
+            for a in actions(cfg.trace)
+            if isinstance(a, Exec) and len(a.locations) > 1
+        ]
     parent = {l: l for l in locs}
 
     def find(x: str) -> str:
@@ -135,12 +156,10 @@ def assign_workers(
             lo, hi = sorted((ra, rb))
             parent[hi] = lo
 
-    for cfg in system.configs:
-        for a in actions(cfg.trace):
-            if isinstance(a, Exec) and len(a.locations) > 1:
-                first, *rest = sorted(a.locations)
-                for other in rest:
-                    union(first, other)
+    for group in spatial:
+        first, *rest = group
+        for other in rest:
+            union(first, other)
 
     network = getattr(schedule, "network", None)
     if network is not None:
@@ -171,19 +190,19 @@ def assign_workers(
     return sorted(tuple(sorted(b)) for b in bins if b)
 
 
-def _recorded_outputs(system: WorkflowSystem, ckpt: Any) -> dict[str, dict]:
+def _recorded_outputs(program: ExecProgram, ckpt: Any) -> dict[str, dict]:
     """Per-step output payloads recoverable from a checkpoint's store."""
     recorded: dict[str, dict] = {}
     payloads: Mapping[PayloadKey, Any] = ckpt.payloads
-    for cfg in system.configs:
-        for a in actions(cfg.trace):
-            if not isinstance(a, Exec) or a.step in recorded:
+    for lp in program.programs:
+        for op in lp.exec_ops():
+            if op.step in recorded:
                 continue
-            if a.step not in ckpt.completed_execs:
+            if op.step not in ckpt.completed_execs:
                 continue
             out, missing = {}, False
-            for d in a.outputs:
-                for l in sorted(a.locations):
+            for d in op.outputs:
+                for l in sorted(op.locations):
                     if (l, d) in payloads:
                         out[d] = payloads[(l, d)]
                         break
@@ -198,7 +217,7 @@ def _recorded_outputs(system: WorkflowSystem, ckpt: Any) -> dict[str, dict]:
                         break
                     out[d] = hit
             if not missing:
-                recorded[a.step] = out
+                recorded[op.step] = out
     return recorded
 
 
@@ -232,8 +251,7 @@ def _worker_main(cfg: dict) -> None:
                 pass  # coordinator is gone; nothing left to report to
 
     try:
-        from repro._compat import suppress_deprecations
-        from repro.workflow.threaded import ThreadedRuntime
+        from repro.workflow.threaded import ThreadedProgramRuntime
         from repro.workflow.transport import HybridTransport, get_transport
 
         transport_cls = get_transport(cfg["transport"])
@@ -252,7 +270,7 @@ def _worker_main(cfg: dict) -> None:
         if ctl.recv() != ("go",):  # coordinator aborted startup
             return
 
-        system: WorkflowSystem = cfg["system"]
+        programs: Mapping[str, LocationProgram] = cfg["programs"]
         metas: Mapping[str, StepMeta] = cfg["steps"]
         completed: frozenset[str] = cfg["completed"]
         recorded: Mapping[str, dict] = cfg["recorded"]
@@ -287,38 +305,39 @@ def _worker_main(cfg: dict) -> None:
 
             return run
 
-        step_fns = {name: meta.fn for name, meta in metas.items()}
-        bundles = build_bundles(system, step_fns, step_meta=dict(metas))
-        mine = {loc: bundles[loc] for loc in cfg["locations"]}
-        for loc, bundle in mine.items():
-            bundle.steps = {
-                s: replace(m, fn=wrap(loc, s, m.fn))
-                for s, m in bundle.steps.items()
+        local_steps = {
+            loc: {
+                s: replace(metas[s], fn=wrap(loc, s, metas[s].fn))
+                for s in lp.exec_step_names()
             }
-        init = {
-            (l, d): v for (l, d), v in cfg["initial"].items() if l in mine
+            for loc, lp in programs.items()
         }
-        with suppress_deprecations():
-            rt = ThreadedRuntime(
-                mine,
-                initial_payloads=init,
-                transport=transport,
-                timeout_s=cfg["timeout_s"],
-            )
-            try:
-                data = rt.run()
-            except BaseException as e:  # noqa: BLE001
-                loc, err = (rt.errors or [(cfg["locations"][0], e)])[0]
-                tell(
-                    (
-                        "error",
-                        wid,
-                        loc,
-                        current.get(loc),
-                        f"{type(err).__name__}: {err}",
-                    )
+        init = {
+            (l, d): v
+            for (l, d), v in cfg["initial"].items()
+            if l in programs
+        }
+        rt = ThreadedProgramRuntime(
+            programs,
+            local_steps,
+            initial_payloads=init,
+            transport=transport,
+            timeout_s=cfg["timeout_s"],
+        )
+        try:
+            data = rt.run()
+        except BaseException as e:  # noqa: BLE001
+            loc, err = (rt.errors or [(cfg["locations"][0], e)])[0]
+            tell(
+                (
+                    "error",
+                    wid,
+                    loc,
+                    current.get(loc),
+                    f"{type(err).__name__}: {err}",
                 )
-                return
+            )
+            return
         tell(("done", wid, {l: dict(d) for l, d in data.items()}))
     except BaseException as e:  # noqa: BLE001
         loc = cfg["locations"][0] if cfg["locations"] else None
@@ -339,6 +358,19 @@ class MultiprocessProgram(BackendProgram):
     _completed = None  # set of completed step names
     _pending_ckpt = None
     last_pids = {}  # worker id -> OS pid of the last run (never mutated)
+
+    def _run_instance(
+        self,
+        initial_payloads: Mapping[PayloadKey, Any] | None,
+        instance_tag: str,
+    ) -> ExecutionResult:
+        # run() spawns a full worker-process fleet and mutates the shared
+        # snapshot state (_pending_ckpt swap, _store/_completed) — batch
+        # instances are serialised rather than racing a process fleet per
+        # pool thread.  run_many still amortises lowering/compilation.
+        lock = self.__dict__.setdefault("_instance_lock", threading.Lock())
+        with lock:
+            return self.run(initial_payloads)
 
     def run(
         self, initial_payloads: Mapping[PayloadKey, Any] | None = None
@@ -377,18 +409,18 @@ class MultiprocessProgram(BackendProgram):
             ckpt, self._pending_ckpt = self._pending_ckpt, None
             store.update(ckpt.payloads)
             completed |= set(ckpt.completed_execs)
-            recorded = _recorded_outputs(self.system, ckpt)
+            recorded = _recorded_outputs(self.program, ckpt)
         if initial_payloads:
             store.update(initial_payloads)
         self._store, self._completed = store, completed
 
         groups = assign_workers(
-            self.system, workers=workers, schedule=schedule
+            self.program, workers=workers, schedule=schedule
         )
         ctx = mp.get_context(start_method)
         tmpdir = tempfile.mkdtemp(prefix="swirl-mp-")
         addresses = socket_addresses(
-            self.system.locations(), base_dir=tmpdir
+            self.program.locations(), base_dir=tmpdir
         )
         authkey = os.urandom(16)
 
@@ -453,7 +485,9 @@ class MultiprocessProgram(BackendProgram):
                 cfg = dict(
                     worker_id=wid,
                     locations=group,
-                    system=self.system,
+                    programs={
+                        loc: self.program[loc] for loc in group
+                    },
                     steps=dict(self.steps),
                     addresses=addresses,
                     authkey=authkey,
@@ -564,7 +598,7 @@ class MultiprocessProgram(BackendProgram):
             )
 
         data: dict[str, dict[str, Any]] = {
-            loc: {} for loc in self.system.locations()
+            loc: {} for loc in self.program.locations()
         }
         for wid in sorted(finals):
             for loc, local in finals[wid].items():
@@ -619,12 +653,14 @@ class MultiprocessBackend(Backend):
 
     def compile(
         self,
-        system: WorkflowSystem,
+        program: ExecProgram | WorkflowSystem,
         steps: Mapping[str, StepMeta],
         options: Mapping[str, Any],
     ) -> MultiprocessProgram:
         return MultiprocessProgram(
-            system=system, steps=dict(steps), options=dict(options)
+            program=self.lower(program, options),
+            steps=dict(steps),
+            options=dict(options),
         )
 
 

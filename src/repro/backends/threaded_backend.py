@@ -1,33 +1,40 @@
 """``threaded`` backend — decentralised per-location threads over channels.
 
 This is the execution model of the paper's generated TCP programs: every
-location interprets only its own compiled bundle; there is no central
-orchestrator.  Channel fault injection (drops / delays, seeded per endpoint)
-threads through the ``Lowered`` options, which is how the fault-tolerance
-experiments select their failure model.
+location interprets only its own per-location program
+(:class:`~repro.exec.program.LocationProgram` op arrays — no central
+orchestrator, no trace trees).  Channel fault injection (drops / delays,
+seeded per endpoint) threads through the ``Lowered`` options, which is how
+the fault-tolerance experiments select their failure model.
+
+``run_many`` shares **one** transport across the whole batch: each
+instance's channel endpoints are namespaced by an instance tag, so many
+workflow instances stream through the same wire concurrently while the
+compiled program is reused untouched.
 """
 
 from __future__ import annotations
 
-from typing import Any, Mapping
+from typing import Any, Mapping, Sequence
 
-from repro._compat import suppress_deprecations
-from repro.core.compile import StepMeta, build_bundles
+from repro.core.compile import StepMeta
 from repro.core.syntax import WorkflowSystem
+from repro.exec.program import ExecProgram
 
-from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
+from .base import (
+    DEFAULT_MAX_CONCURRENT,
+    Backend,
+    BackendProgram,
+    ExecutionResult,
+    PayloadKey,
+)
 
 
 class ThreadedProgram(BackendProgram):
-    def run(
-        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
-    ) -> ExecutionResult:
+    def _make_transport(self, opts: dict[str, Any]):
         from repro.workflow.channels import ChannelRegistry
-        from repro.workflow.threaded import ThreadedRuntime
         from repro.workflow.transport import InMemoryTransport, Transport
 
-        opts = dict(self.options)
-        opts.pop("schedule", None)  # placement already baked into the system
         transport = opts.pop("transport", None)
         registry = opts.pop("channels", None)
         channel_kwargs = {
@@ -56,28 +63,167 @@ class ThreadedProgram(BackendProgram):
                     f"({sorted(channel_kwargs)}), not both"
                 )
             transport = InMemoryTransport(registry)
-        step_fns = {name: meta.fn for name, meta in self.steps.items()}
-        bundles = build_bundles(
-            self.system, step_fns, step_meta=dict(self.steps)
+        return transport
+
+    def _local_steps(self) -> dict[str, dict[str, StepMeta]]:
+        return {
+            lp.location: {
+                s: self.steps[s] for s in lp.exec_step_names()
+            }
+            for lp in self.program.programs
+        }
+
+    def _execute(
+        self,
+        transport,
+        initial_payloads: Mapping[PayloadKey, Any] | None,
+        *,
+        timeout_s: float,
+        instance_tag: str | None = None,
+    ) -> dict[str, dict[str, Any]]:
+        from repro.workflow.threaded import ThreadedProgramRuntime
+
+        rt = ThreadedProgramRuntime(
+            self.program.by_location,
+            self._local_steps(),
+            initial_payloads=initial_payloads,
+            transport=transport,
+            timeout_s=timeout_s,
+            instance_tag=instance_tag,
         )
-        with suppress_deprecations():
-            rt = ThreadedRuntime(
-                bundles,
-                initial_payloads=initial_payloads,
-                transport=transport,
-                **opts,
-            )
-            data = rt.run()
+        return rt.run()
+
+    def run(
+        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
+    ) -> ExecutionResult:
+        opts = dict(self.options)
+        opts.pop("schedule", None)  # placement already baked into the IR
+        timeout_s = float(opts.pop("timeout_s", 60.0))
+        transport = self._make_transport(opts)
+        data = self._execute(
+            transport, initial_payloads, timeout_s=timeout_s
+        )
         return ExecutionResult(
             backend="threaded",
             data={loc: dict(d) for loc, d in data.items()},
             stats=transport.stats(),
         )
 
+    def run_many(
+        self,
+        inputs: Sequence[Mapping[PayloadKey, Any] | None],
+        *,
+        max_concurrent: int = DEFAULT_MAX_CONCURRENT,
+    ) -> list[ExecutionResult]:
+        """Pipelined batch execution over one shared transport.
+
+        Instead of spawning fresh location threads per instance (the
+        dominant cost at serving scale), the batch runs on a **persistent
+        serving pool**: ``lanes × |locations|`` long-lived threads, each
+        streaming its lane's instances through one location's op array,
+        plus one shared branch pool for parallel trace branches.  Channel
+        endpoints are namespaced per instance, so up to ``max_concurrent``
+        instances are in flight on the same transport concurrently.
+        """
+        import threading
+        from concurrent.futures import ThreadPoolExecutor
+
+        from repro.workflow.threaded import (
+            ThreadedProgramRuntime,
+            total_par_branches,
+        )
+
+        inputs = list(inputs)
+        if max_concurrent < 1:
+            raise ValueError(
+                f"max_concurrent must be >= 1, got {max_concurrent}"
+            )
+        if not inputs:
+            return []
+        opts = dict(self.options)
+        opts.pop("schedule", None)
+        timeout_s = float(opts.pop("timeout_s", 60.0))
+        transport = self._make_transport(opts)
+        programs = self.program.by_location
+        local_steps = self._local_steps()
+        lanes = min(max_concurrent, len(inputs))
+        n_branches = total_par_branches(programs)
+        branch_pool = (
+            ThreadPoolExecutor(
+                max_workers=lanes * n_branches,
+                thread_name_prefix="swirl-serve-branch",
+            )
+            if n_branches
+            else None
+        )
+        # One pre-built runtime per instance: cheap (dict setup only —
+        # programs, step registries and control specs are shared), and the
+        # per-instance endpoint tag keeps the shared transport partitioned.
+        runtimes = [
+            ThreadedProgramRuntime(
+                programs,
+                local_steps,
+                initial_payloads=payloads,
+                transport=transport,
+                timeout_s=timeout_s,
+                instance_tag=str(i),
+                branch_pool=branch_pool,
+                validate=False,  # compile() already checked coverage
+            )
+            for i, payloads in enumerate(inputs)
+        ]
+
+        def lane_worker(lane: int, loc: str) -> None:
+            for idx in range(lane, len(runtimes), lanes):
+                runtimes[idx]._run_location(loc)
+
+        threads = [
+            threading.Thread(
+                target=lane_worker,
+                args=(lane, loc),
+                name=f"swirl-serve-{lane}-{loc}",
+                daemon=True,
+            )
+            for lane in range(lanes)
+            for loc in sorted(programs)
+        ]
+        try:
+            for th in threads:
+                th.start()
+            per_lane = -(-len(runtimes) // lanes)  # ceil
+            deadline_join = timeout_s * per_lane
+            for th in threads:
+                th.join(deadline_join)
+                if th.is_alive():
+                    for rt in runtimes:
+                        rt._raise_first_error()
+                    raise TimeoutError(
+                        "a serving lane did not finish its instances"
+                    )
+        finally:
+            if branch_pool is not None:
+                branch_pool.shutdown(wait=False, cancel_futures=True)
+        # Transport stats are whole-batch aggregates (one shared wire);
+        # each result gets its own copy, marked as such, so per-run
+        # consumers can tell batch totals from single-run counts and a
+        # mutation through one result never aliases the others.
+        stats = transport.stats()
+        results = []
+        for rt in runtimes:
+            rt._raise_first_error()
+            results.append(
+                ExecutionResult(
+                    backend="threaded",
+                    data={loc: dict(d) for loc, d in rt.data.items()},
+                    stats=dict(stats, batch_instances=len(runtimes)),
+                )
+            )
+        return results
+
 
 class ThreadedBackend(Backend):
     name = "threaded"
-    capabilities = frozenset({"decentralised", "fault-injection"})
+    capabilities = frozenset({"decentralised", "fault-injection", "serve"})
 
     def known_options(self) -> frozenset[str]:
         return super().known_options() | frozenset(
@@ -93,12 +239,14 @@ class ThreadedBackend(Backend):
 
     def compile(
         self,
-        system: WorkflowSystem,
+        program: ExecProgram | WorkflowSystem,
         steps: Mapping[str, StepMeta],
         options: Mapping[str, Any],
     ) -> ThreadedProgram:
         return ThreadedProgram(
-            system=system, steps=dict(steps), options=dict(options)
+            program=self.lower(program, options),
+            steps=dict(steps),
+            options=dict(options),
         )
 
 

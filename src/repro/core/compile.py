@@ -2,21 +2,20 @@
 
 A *bundle* is a self-contained, per-location executable: the location's
 execution trace plus the metadata the semantics does not model (step
-callables / commands, data payload specs, channel endpoints).  The paper's
-reference compiler emits one multithreaded Python program per location over
-TCP sockets; here the same separation is kept with two back-ends:
+callables / commands, data payload specs, channel endpoints).
 
-* :class:`LocationBundle` — the in-memory program handed to the
-  :mod:`repro.workflow` runtime (threads + in-process channels).  This is the
-  faithful decentralised runtime: every location interprets *only its own
-  trace*; there is no central orchestrator.
-* :func:`emit_python_source` — generates standalone Python source per
-  location (the paper's "self-contained workflow execution bundle",
-  Research-Object ready), used by the toolchain example and golden tests.
+Since the execution-IR refactor the canonical per-location executable is
+the :class:`~repro.exec.program.LocationProgram` of :mod:`repro.exec`
+(program-order op arrays, interpreted by every backend); what remains here
+is the **step metadata model** (:class:`StepMeta`, shared by the whole
+toolchain) and the legacy bundle layer:
 
-The JAX back-end (lowering location traces onto mesh slices with
-``ppermute``-based send/recv) lives in :mod:`repro.launch.bundle_jax` since it
-depends on mesh construction.
+* :class:`LocationBundle` / :func:`build_bundles` — a *view shim* over the
+  canonical lowering, feeding the deprecated tree runtimes that are kept
+  as differential-test oracles;
+* :func:`emit_python_source` / :func:`emit_all` — deprecation shims over
+  :mod:`repro.exec.emit` (standalone per-location Python source, now
+  generated from the program IR).
 """
 
 from __future__ import annotations
@@ -27,11 +26,9 @@ from typing import Any, Callable, Mapping, Sequence
 
 from .syntax import (
     Exec,
-    Nil,
-    Par,
+    LocationConfig,
     Recv,
     Send,
-    Seq,
     Trace,
     WorkflowSystem,
     actions,
@@ -101,24 +98,35 @@ def build_bundles(
     ``step_fns`` must cover every step executed anywhere in ``w``; a step
     mapped onto several locations (spatial constraint) receives the same
     callable everywhere — the runtime synchronises the exec like the (EXEC)
-    rule does.  Canonical entry point used by the backends; the legacy name
-    :func:`compile_bundles` is a deprecation shim over it.
+    rule does.
+
+    Since the execution-IR refactor this is a *view shim* over the
+    canonical lowering (:func:`repro.exec.lower_system`): bundles are
+    projected from the per-location programs, and no backend consumes them
+    anymore — they feed the legacy tree runtimes kept as reference oracles.
+    The legacy name :func:`compile_bundles` additionally warns.
     """
+    from repro.exec.program import lower_system
+
+    program = lower_system(w)
     bundles: dict[str, LocationBundle] = {}
-    for cfg in w.configs:
+    for lp in program.programs:
         local_steps: dict[str, StepMeta] = {}
-        for a in actions(cfg.trace):
-            if isinstance(a, Exec):
-                if a.step not in step_fns:
-                    raise KeyError(f"no step function registered for {a.step!r}")
-                meta = (step_meta or {}).get(a.step)
-                local_steps[a.step] = meta or StepMeta(
-                    fn=step_fns[a.step], inputs=a.inputs, outputs=a.outputs
+        for op in lp.exec_ops():
+            if op.step not in step_fns:
+                raise KeyError(
+                    f"no step function registered for {op.step!r}"
                 )
-        bundles[cfg.location] = LocationBundle(
-            location=cfg.location,
-            initial_data=cfg.data,
-            trace=cfg.trace,
+            meta = (step_meta or {}).get(op.step)
+            local_steps[op.step] = meta or StepMeta(
+                fn=step_fns[op.step],
+                inputs=frozenset(op.inputs),
+                outputs=frozenset(op.outputs),
+            )
+        bundles[lp.location] = LocationBundle(
+            location=lp.location,
+            initial_data=lp.data,
+            trace=w[lp.location].trace,
             steps=local_steps,
         )
     return bundles
@@ -142,81 +150,49 @@ def compile_bundles(
 
 # ---------------------------------------------------------------------------
 # Standalone Python source emission (paper §5's generated bundles)
+#
+# The generators moved to repro.exec.emit, driven by the per-location
+# program IR instead of the trace trees; the two entry points below are
+# deprecation shims kept for the legacy bundle workflow.
 # ---------------------------------------------------------------------------
-
-_PROGRAM_TEMPLATE = '''\
-"""Auto-generated SWIRL bundle for location {location!r}.
-
-Generated by repro.core.compile.emit_python_source — a self-contained,
-decentralised executor for this location's trace.  Channels are injected by
-the harness as `channels[(src, dst, port)]` queue-like objects with
-``put(payload)`` / ``get()``; step commands as `steps[name](inputs) -> outputs`.
-"""
-
-
-def run(channels, steps, initial_data):
-    data = dict(initial_data)
-
-{body}
-    return data
-'''
-
-
-def _emit_trace(t: Trace, indent: int, uid: list[int]) -> str:
-    pad = "    " * indent
-
-    if isinstance(t, Nil):
-        return f"{pad}pass\n"
-    if isinstance(t, Exec):
-        ins = sorted(t.inputs)
-        outs = sorted(t.outputs)
-        return (
-            f"{pad}_out = steps[{t.step!r}]({{k: data[k] for k in {ins!r}}})\n"
-            f"{pad}data.update({{k: _out[k] for k in {outs!r}}})\n"
-        )
-    if isinstance(t, Send):
-        return (
-            f"{pad}channels[({t.src!r}, {t.dst!r}, {t.port!r})]"
-            f".put(({t.data!r}, data[{t.data!r}]))\n"
-        )
-    if isinstance(t, Recv):
-        return (
-            f"{pad}_k, _v = channels[({t.src!r}, {t.dst!r}, {t.port!r})].get()\n"
-            f"{pad}data[_k] = _v\n"
-        )
-    if isinstance(t, Seq):
-        return "".join(_emit_trace(i, indent, uid) for i in t.items)
-    if isinstance(t, Par):
-        # Parallel branches become threads — the generated program is
-        # multithreaded exactly like the reference implementation's output.
-        uid[0] += 1
-        gid = uid[0]
-        lines = [f"{pad}import threading as _th_{gid}\n"]
-        names = []
-        for bi, b in enumerate(t.branches):
-            fname = f"_branch_{gid}_{bi}"
-            names.append(fname)
-            lines.append(f"{pad}def {fname}():\n")
-            lines.append(_emit_trace(b, indent + 1, uid))
-        lines.append(
-            f"{pad}_ts_{gid} = [_th_{gid}.Thread(target=f) for f in [{', '.join(names)}]]\n"
-        )
-        lines.append(f"{pad}[t.start() for t in _ts_{gid}]\n")
-        lines.append(f"{pad}[t.join() for t in _ts_{gid}]\n")
-        return "".join(lines)
-    raise TypeError(f"not a trace: {t!r}")
 
 
 def emit_python_source(bundle: LocationBundle) -> str:
-    """Emit a standalone Python program for one location's trace."""
-    body = _emit_trace(bundle.trace, indent=1, uid=[0])
-    return _PROGRAM_TEMPLATE.format(location=bundle.location, body=body)
+    """Deprecated: emit a standalone Python program for one bundle.
+
+    Shim over :func:`repro.exec.emit.emit_location_source` — the bundle's
+    trace is lowered to a :class:`~repro.exec.program.LocationProgram` and
+    emitted from its op arrays.
+    """
+    from repro._compat import warn_legacy
+    from repro.exec.emit import emit_location_source
+    from repro.exec.program import lower_system
+
+    warn_legacy(
+        "repro.core.compile.emit_python_source(bundle)",
+        "repro.exec.emit_location_source(plan.exec_program()[location])",
+    )
+    system = WorkflowSystem(
+        (
+            LocationConfig(
+                bundle.location, bundle.initial_data, bundle.trace
+            ),
+        )
+    )
+    return emit_location_source(lower_system(system)[bundle.location])
 
 
 def emit_all(w: WorkflowSystem) -> dict[str, str]:
-    """Emit per-location sources for a whole system (no step fns needed)."""
-    out = {}
-    for cfg in w.configs:
-        b = LocationBundle(cfg.location, cfg.data, cfg.trace)
-        out[cfg.location] = emit_python_source(b)
-    return out
+    """Deprecated: per-location sources for a whole system.
+
+    Shim over :func:`repro.exec.emit.emit_program_sources`.
+    """
+    from repro._compat import warn_legacy
+    from repro.exec.emit import emit_program_sources
+    from repro.exec.program import lower_system
+
+    warn_legacy(
+        "repro.core.compile.emit_all(system)",
+        "repro.exec.emit_program_sources(plan.exec_program())",
+    )
+    return emit_program_sources(lower_system(w))

@@ -164,6 +164,63 @@ class FlatTrace:
             return (Par(tuple(children)) if exact else par(*children)), pos
         raise ValueError(f"unknown structure opcode {code}")
 
+    def compact(self) -> "FlatTrace":
+        """The op-array export: live actions + normalised flat skeleton.
+
+        Drops every dead slot and applies the ``seq``/``par`` smart-
+        constructor identities (units removed, single children inlined,
+        same-kind nests flattened) *without leaving the flat form* — the
+        flat analogue of :meth:`rebuild`.  This is what the execution
+        lowering (:mod:`repro.exec`) consumes: a program-order action
+        array plus the minimal control skeleton, with
+        ``compact().rebuild() == rebuild()`` by construction.
+        """
+        kinds = {OP_SEQ, OP_PAR}
+
+        def norm(pos: int) -> tuple[tuple | None, int]:
+            code, arg = self.ops[pos]
+            pos += 1
+            if code == OP_NIL:
+                return None, pos
+            if code == OP_ACT:
+                if self.alive[arg]:
+                    return (OP_ACT, self.actions[arg]), pos
+                return None, pos
+            children: list[tuple] = []
+            for _ in range(arg):
+                child, pos = norm(pos)
+                if child is None:
+                    continue
+                if child[0] == code:
+                    children.extend(child[1])
+                else:
+                    children.append(child)
+            if not children:
+                return None, pos
+            if len(children) == 1:
+                return children[0], pos
+            assert code in kinds
+            return (code, children), pos
+
+        root, end = norm(0)
+        if end != len(self.ops):
+            raise ValueError("trailing structure ops — corrupt flat trace")
+        ops: list[tuple[int, int]] = []
+        actions: list[Action] = []
+        stack: list[tuple] = [] if root is None else [root]
+        if root is None:
+            ops.append((OP_NIL, 0))
+        while stack:
+            node = stack.pop()
+            code, payload = node
+            if code == OP_ACT:
+                ops.append((OP_ACT, len(actions)))
+                actions.append(payload)
+            else:
+                ops.append((code, len(payload)))
+                stack.extend(reversed(payload))
+        return FlatTrace(ops, actions)
+
     # -- views --------------------------------------------------------------
     def live_actions(self) -> Iterator[tuple[int, Action]]:
         """``(index, action)`` pairs still alive, in program order."""

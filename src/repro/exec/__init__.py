@@ -1,0 +1,50 @@
+"""``repro.exec`` — the executable program IR between ``sched`` and backends.
+
+SWIRL is "not designed for human interaction but to serve as a low-level
+compilation target"; this package is where that target becomes literal.
+:func:`lower_system` turns an (optimised, scheduled) workflow system into an
+:class:`ExecProgram`: one :class:`LocationProgram` per location holding a
+*program-order array* of resolved ``SEND``/``RECV``/``EXEC`` ops plus a flat
+control skeleton (sequence/parallel structure), with channel endpoints, step
+bindings, leader election and placement/schedule metadata resolved at
+lowering time.  Every in-tree backend is an interpreter over this one form —
+no backend walks the recursive trace trees.
+
+Layering::
+
+    core (syntax, flat IR)  →  sched (placement)  →  exec (program IR)  →  backends
+
+The legacy tree interpreters (:class:`repro.workflow.runtime.Runtime`,
+:class:`repro.workflow.threaded.ThreadedRuntime`) are kept as deprecated
+reference oracles; ``tests/test_differential.py`` checks flat-program
+execution against them on random DAGs.
+"""
+
+from .program import (
+    ExecOp,
+    ExecProgram,
+    LocationProgram,
+    Op,
+    RecvOp,
+    SendOp,
+    lower_flat,
+    lower_system,
+    to_action,
+)
+from .interp import Cursor
+from .emit import emit_location_source, emit_program_sources
+
+__all__ = [
+    "ExecOp",
+    "SendOp",
+    "RecvOp",
+    "Op",
+    "LocationProgram",
+    "ExecProgram",
+    "lower_system",
+    "lower_flat",
+    "to_action",
+    "Cursor",
+    "emit_location_source",
+    "emit_program_sources",
+]

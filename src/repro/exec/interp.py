@@ -1,0 +1,200 @@
+"""Interpretation machinery over the program IR.
+
+:class:`Cursor` is a *structured program counter* for one
+:class:`~repro.exec.program.LocationProgram`: it maintains the set of op
+indices that are active **now** (not guarded by an unfinished sequential
+prefix — exactly the ``active_occurrences`` notion of
+:mod:`repro.core.semantics`, computed incrementally over the flat skeleton
+instead of by tree traversal).  Completing an op advances sequence pointers
+and parallel join counters in O(depth); the enabled set is always available
+in O(1).
+
+Centralised interpreters (the ``inprocess`` dataflow runtime, the
+deterministic ``jax`` reducer) drive one cursor per location and fire
+matching ops; the decentralised threaded interpreter instead recurses over
+the same :class:`~repro.exec.program.ControlSpec` with real threads.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Mapping
+
+from .program import (
+    K_ACT,
+    K_PAR,
+    K_SEQ,
+    ExecOp,
+    LocationProgram,
+    RecvOp,
+    SendOp,
+)
+
+__all__ = ["Cursor", "first_enabled_comm", "enabled_exec_picks"]
+
+
+class Cursor:
+    """Incremental enabled-set tracker over one location program."""
+
+    __slots__ = (
+        "program",
+        "_spec",
+        "enabled",
+        "_op_done",
+        "_seq_ptr",
+        "_par_left",
+        "_finished",
+    )
+
+    def __init__(self, program: LocationProgram):
+        self.program = program
+        spec = program.control()
+        self._spec = spec
+        self.enabled: set[int] = set()
+        self._op_done = [False] * len(program.ops)
+        self._seq_ptr = [0] * len(spec.kind)
+        self._par_left = [0] * len(spec.kind)
+        self._finished = False
+        if spec.root is None:
+            self._finished = True
+        else:
+            self._enter(spec.root)
+
+    # -- state --------------------------------------------------------------
+    def finished(self) -> bool:
+        return self._finished
+
+    def done_flags(self) -> list[bool]:
+        """Per-op completion flags (for remaining-term reconstruction)."""
+        return list(self._op_done)
+
+    def enabled_ops(self) -> list[int]:
+        """Active op indices in program order (deterministic iteration)."""
+        return sorted(self.enabled)
+
+    # -- transitions ---------------------------------------------------------
+    def complete(self, op_index: int) -> None:
+        """Mark one *enabled* op as executed; exposes its successors."""
+        if op_index not in self.enabled:
+            raise ValueError(
+                f"op {op_index} is not active on {self.program.location!r}"
+            )
+        self.enabled.discard(op_index)
+        self._op_done[op_index] = True
+        self._node_done(self._spec.leaf_node[op_index])
+
+    # -- internals -----------------------------------------------------------
+    def _enter(self, nid: int) -> None:
+        spec = self._spec
+        kind = spec.kind[nid]
+        if kind == K_ACT:
+            self.enabled.add(spec.instr[nid])
+            return
+        kids = spec.children[nid]
+        if not kids:  # cannot happen for compacted programs; be safe
+            self._node_done(nid)
+            return
+        if kind == K_SEQ:
+            self._seq_ptr[nid] = 0
+            self._enter(kids[0])
+        else:  # K_PAR
+            self._par_left[nid] = len(kids)
+            for k in kids:
+                self._enter(k)
+
+    def _node_done(self, nid: int) -> None:
+        spec = self._spec
+        while True:
+            parent = spec.parent[nid]
+            if parent < 0:
+                self._finished = True
+                return
+            if spec.kind[parent] == K_SEQ:
+                self._seq_ptr[parent] += 1
+                kids = spec.children[parent]
+                if self._seq_ptr[parent] < len(kids):
+                    self._enter(kids[self._seq_ptr[parent]])
+                    return
+                nid = parent
+            else:  # K_PAR
+                self._par_left[parent] -= 1
+                if self._par_left[parent] > 0:
+                    return
+                nid = parent
+
+
+# ---------------------------------------------------------------------------
+# Shared enablement matching — one semantics core for every centralised
+# interpreter (the inprocess dataflow runtime, the deterministic jax
+# reducer).  The predicates here ARE the Fig. 3 premises over cursors.
+# ---------------------------------------------------------------------------
+
+
+def first_enabled_comm(
+    cursors: Mapping[str, Cursor],
+    data: Mapping[str, set],
+    order: Iterable[str] | None = None,
+) -> tuple[SendOp, str, int, int] | None:
+    """First (COMM)/(L-COMM)-enabled pair, scanning ``order``.
+
+    A send is enabled when active with its datum resident at the source;
+    it matches the first active recv on the same ``(port, src, dst)`` at
+    the destination (never itself, for local comms).  Returns
+    ``(send_op, src_location, send_index, recv_index)`` or ``None``.
+    """
+    for loc in order if order is not None else cursors:
+        cur = cursors[loc]
+        for i in cur.enabled_ops():
+            op = cur.program.ops[i]
+            if not isinstance(op, SendOp):
+                continue
+            if op.src != loc or op.data not in data[loc]:
+                continue
+            dst = cursors.get(op.dst)
+            if dst is None:
+                continue
+            for j in dst.enabled_ops():
+                r = dst.program.ops[j]
+                if (
+                    isinstance(r, RecvOp)
+                    and r.port == op.port
+                    and r.src == op.src
+                    and r.dst == op.dst
+                    and not (op.src == op.dst and j == i)
+                ):
+                    return op, loc, i, j
+    return None
+
+
+def enabled_exec_picks(
+    cursors: Mapping[str, Cursor],
+    data: Mapping[str, set],
+    order: Iterable[str] | None = None,
+) -> list[tuple[ExecOp, tuple[tuple[str, int], ...]]]:
+    """(EXEC)-enabled ops with their per-location occurrence picks.
+
+    An exec fires when every location of ``M(s)`` has an active occurrence
+    of the same predicate *and* ``In^D(s)`` is resident on each; the first
+    active occurrence per location is picked (occurrences of one predicate
+    are interchangeable).  Returns ``[(op, ((location, op_index), ...))]``
+    in discovery order — callers impose their own firing order.
+    """
+    sites: dict[tuple, dict[str, int]] = {}
+    for loc in order if order is not None else cursors:
+        cur = cursors[loc]
+        for i in cur.enabled_ops():
+            op = cur.program.ops[i]
+            if isinstance(op, ExecOp):
+                key = (op.step, op.inputs, op.outputs, op.locations)
+                sites.setdefault(key, {}).setdefault(loc, i)
+    out: list[tuple[ExecOp, tuple[tuple[str, int], ...]]] = []
+    for key, by_loc in sites.items():
+        _, inputs, _, locations = key
+        if not all(l in by_loc for l in locations):
+            continue
+        if not all(set(inputs) <= data[l] for l in locations):
+            continue
+        picks = tuple((l, by_loc[l]) for l in locations)
+        op = cursors[picks[0][0]].program.ops[picks[0][1]]
+        assert isinstance(op, ExecOp)
+        out.append((op, picks))
+    return out

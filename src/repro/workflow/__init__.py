@@ -2,8 +2,10 @@
 
 * :mod:`~repro.workflow.runtime`  — reduction-driven, checkpointable executor
   with retry / speculation / heartbeats (execution *is* SWIRL reduction).
-* :mod:`~repro.workflow.threaded` — decentralised per-location threads over
-  channels (the generated-bundle execution model of paper §5).
+* :mod:`~repro.workflow.threaded` — decentralised per-location threads
+  interpreting the execution IR (:class:`ThreadedProgramRuntime`, the
+  generated-program execution model of paper §5; the tree-walking
+  ``ThreadedRuntime`` is kept as a deprecated reference oracle).
 * :mod:`~repro.workflow.channels` — in-process channels with fault injection.
 * :mod:`~repro.workflow.transport` — pluggable COMM transports (in-memory
   queues, ack-based sockets) shared by the threaded and multiprocess
@@ -32,7 +34,7 @@ from .fault import (
     TransientError,
 )
 from .runtime import Checkpoint, Runtime, RunStats, WorkflowDeadlock
-from .threaded import ThreadedRuntime
+from .threaded import ThreadedProgramRuntime, ThreadedRuntime
 from .elastic import (
     plan_recovery,
     rebalance,
@@ -55,6 +57,7 @@ __all__ = [
     "Checkpoint",
     "WorkflowDeadlock",
     "ThreadedRuntime",
+    "ThreadedProgramRuntime",
     "RetryPolicy",
     "SpeculationPolicy",
     "HeartbeatMonitor",

@@ -1,14 +1,18 @@
 """Decentralised threaded runtime — one thread per location, no orchestrator.
 
-This back-end executes the *compiled bundles* of :mod:`repro.core.compile`
-the way the paper's generated TCP programs do: every location runs its own
-trace against real channels, with no shared scheduler state.  Spatial
-constraints (one step on many locations) synchronise through per-exec
-barriers, matching the (EXEC) rule's synchronised reduction.
+:class:`ThreadedProgramRuntime` executes per-location programs of the
+execution IR (:mod:`repro.exec.program`) the way the paper's generated TCP
+programs do: every location interprets *only its own op array* against real
+channels, with no shared scheduler state.  Spatial constraints (one step on
+many locations) synchronise through per-exec barriers, matching the (EXEC)
+rule's synchronised reduction.  An ``instance_tag`` namespaces every channel
+endpoint, which is what lets :meth:`repro.api.Executable.run_many` drive
+many workflow instances through one shared transport concurrently.
 
-This is the back-end used by the 1000 Genomes evaluation; the checkpointable
-:class:`repro.workflow.runtime.Runtime` is the one used under fault
-injection (its state is a reachable SWIRL term, so snapshots are trivial).
+This is the back-end used by the 1000 Genomes evaluation.  The historical
+tree-walking interpreter (:class:`ThreadedRuntime`, over compiled
+``LocationBundle``s) is kept verbatim as a deprecated reference oracle —
+``tests/test_differential.py`` checks flat-program execution against it.
 """
 
 from __future__ import annotations
@@ -17,10 +21,38 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Mapping
 
-from repro.core.compile import LocationBundle
+from repro.core.compile import LocationBundle, StepMeta
 from repro.core.syntax import Exec, Nil, Par, Recv, Send, Seq, Trace
+from repro.exec.program import (
+    K_ACT,
+    K_PAR,
+    K_SEQ,
+    LocationProgram,
+    RecvOp,
+    SendOp,
+)
+
+
 from .channels import ChannelRegistry
 from .transport import InMemoryTransport, Transport
+
+
+def total_par_branches(programs: Mapping[str, "LocationProgram"]) -> int:
+    """Static upper bound on concurrently-live parallel branches.
+
+    The sum of every ``Par`` node's branch count across all location
+    programs — what one in-flight instance can demand from a shared branch
+    pool at worst (all pars active at once).  ``run_many`` sizes its pool
+    as ``lanes × total_par_branches`` so pooled branches can never starve
+    each other into deadlock.
+    """
+    n = 0
+    for lp in programs.values():
+        spec = lp.control()
+        for nid, kind in enumerate(spec.kind):
+            if kind == K_PAR:
+                n += len(spec.children[nid])
+    return n
 
 
 @dataclass
@@ -63,8 +95,230 @@ class _ExecBarrier:
         return self.outputs
 
 
+class ThreadedProgramRuntime:
+    """Run one thread per location; each interprets only its own program.
+
+    ``programs`` maps location → :class:`~repro.exec.program.LocationProgram`
+    and ``steps`` maps location → step name → :class:`StepMeta` (per-location
+    registries so callers — e.g. the multiprocess worker — can wrap step
+    bodies per location).  ``instance_tag`` suffixes every channel endpoint's
+    port, isolating concurrent workflow instances on one shared transport.
+    """
+
+    def __init__(
+        self,
+        programs: Mapping[str, LocationProgram],
+        steps: Mapping[str, Mapping[str, StepMeta]],
+        *,
+        initial_payloads: Mapping[tuple[str, str], Any] | None = None,
+        transport: Transport | None = None,
+        timeout_s: float = 60.0,
+        instance_tag: str | None = None,
+        branch_pool=None,
+        validate: bool = True,
+    ):
+        self.programs = dict(programs)
+        self.steps = {loc: dict(metas) for loc, metas in steps.items()}
+        if validate:
+            for loc, lp in self.programs.items():
+                local = self.steps.get(loc, {})
+                for op in lp.exec_ops():
+                    if op.step not in local:
+                        raise KeyError(
+                            f"no step function registered for {op.step!r}"
+                        )
+        #: Optional shared executor for parallel branches: run_many reuses
+        #: one pool across the whole batch instead of spawning fresh threads
+        #: per Par node per instance (the pool is sized by the static branch
+        #: count so blocked branches can never starve each other).
+        self._branch_pool = branch_pool
+        self.transport = transport or InMemoryTransport(ChannelRegistry())
+        self.timeout_s = timeout_s
+        self.instance_tag = instance_tag
+        self._barriers: dict[tuple, _ExecBarrier] = {}
+        self._barrier_lock = threading.Lock()
+        self.data: dict[str, dict[str, Any]] = {
+            loc: {} for loc in self.programs
+        }
+        # Per-location condition: writes notify; execs wait on In^D(s) ⊆ D_l
+        # (the (EXEC) rule's premise — after optimisation a datum may arrive
+        # via a *sibling* parallel branch's recv, so exec must block on it).
+        self._cond: dict[str, threading.Condition] = {
+            loc: threading.Condition() for loc in self.programs
+        }
+        for (l, d), v in (initial_payloads or {}).items():
+            if l in self.data:
+                self.data[l][d] = v
+        self.errors: list[tuple[str, BaseException]] = []
+
+    def _endpoint(self, op: SendOp | RecvOp) -> tuple[str, str, str]:
+        if self.instance_tag is None:
+            return op.endpoint
+        return (op.src, op.dst, f"{op.port}#{self.instance_tag}")
+
+    def _put_data(self, loc: str, items: Mapping[str, Any]) -> None:
+        with self._cond[loc]:
+            self.data[loc].update(items)
+            self._cond[loc].notify_all()
+
+    def _wait_data(self, loc: str, names) -> dict[str, Any]:
+        with self._cond[loc]:
+            ok = self._cond[loc].wait_for(
+                lambda: all(d in self.data[loc] for d in names),
+                timeout=self.timeout_s,
+            )
+            if not ok:
+                missing = sorted(d for d in names if d not in self.data[loc])
+                raise TimeoutError(f"{loc} never received {missing}")
+            return {d: self.data[loc][d] for d in names}
+
+    # -- barrier registry ------------------------------------------------------
+    def _barrier_for(self, op) -> _ExecBarrier:
+        key = (op.step, op.inputs, op.outputs, op.locations)
+        with self._barrier_lock:
+            if key not in self._barriers:
+                self._barriers[key] = _ExecBarrier(n=len(op.locations))
+            return self._barriers[key]
+
+    # -- per-location interpreter ----------------------------------------------
+    def _run_op(self, loc: str, op) -> None:
+        if isinstance(op, SendOp):
+            # The datum may be produced by a sibling branch — wait for it.
+            payload = self._wait_data(loc, (op.data,))[op.data]
+            self.transport.send(self._endpoint(op), op.data, payload)
+            return
+        if isinstance(op, RecvOp):
+            msg = self.transport.recv(
+                self._endpoint(op), timeout=self.timeout_s
+            )
+            self._put_data(loc, {msg.data_name: msg.payload})
+            return
+        # ExecOp
+        meta = self.steps[loc][op.step]
+        if not op.is_spatial:
+            inputs = self._wait_data(loc, op.inputs)
+            out = meta.fn(inputs)
+            self._put_data(loc, {d: out[d] for d in op.outputs})
+            return
+        # Spatial constraint: the op's pre-resolved leader flag elects who
+        # runs the step body; everyone else synchronises on the barrier
+        # (the (EXEC) rule's "Out^D(s) added to every D_i").
+        barrier = self._barrier_for(op)
+        if op.leader:
+            try:
+                inputs = self._wait_data(loc, op.inputs)
+                out = meta.fn(inputs)
+                barrier.publish({d: out[d] for d in op.outputs})
+            except BaseException as e:  # noqa: BLE001
+                barrier.fail(e)
+                raise
+        outputs = barrier.wait(self.timeout_s)
+        self._put_data(loc, dict(outputs))
+
+    def _run_node(self, loc: str, spec, nid: int) -> None:
+        kind = spec.kind[nid]
+        if kind == K_ACT:
+            self._run_op(loc, self.programs[loc].ops[spec.instr[nid]])
+            return
+        if kind == K_SEQ:
+            for child in spec.children[nid]:
+                self._run_node(loc, spec, child)
+            return
+        # K_PAR — parallel branches become threads, like the generated
+        # multithreaded bundles of the reference implementation.  With a
+        # shared branch pool (run_many batches) the threads are reused
+        # across instances instead of spawned per Par node; provably
+        # non-blocking send-only branches run inline first (a schedule the
+        # (L-PAR) congruence already allows), and the last blocking branch
+        # runs on the current thread — only true concurrency pays for a
+        # thread handoff.
+        if self._branch_pool is not None:
+            from concurrent.futures import wait as _fwait
+
+            safe = self.programs[loc].inline_send_branches().get(
+                nid, frozenset()
+            )
+            rest = []
+            for c in spec.children[nid]:
+                if c in safe:
+                    self._run_node(loc, spec, c)
+                else:
+                    rest.append(c)
+            if not rest:
+                return
+            futures = [
+                self._branch_pool.submit(self._run_node, loc, spec, c)
+                for c in rest[:-1]
+            ]
+            self._run_node(loc, spec, rest[-1])
+            _, not_done = _fwait(futures, timeout=self.timeout_s)
+            if not_done:
+                for f in not_done:
+                    f.cancel()
+                raise TimeoutError(f"parallel branch stuck on {loc}")
+            for f in futures:
+                f.result()  # propagate the first branch failure
+            return
+        errs: list[BaseException] = []
+
+        def branch(child: int) -> None:
+            try:
+                self._run_node(loc, spec, child)
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [
+            threading.Thread(target=branch, args=(c,), daemon=True)
+            for c in spec.children[nid]
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(self.timeout_s)
+            if th.is_alive():
+                raise TimeoutError(f"parallel branch stuck on {loc}")
+        if errs:
+            raise errs[0]
+
+    def _run_location(self, loc: str) -> None:
+        try:
+            spec = self.programs[loc].control()
+            if spec.root is not None:
+                self._run_node(loc, spec, spec.root)
+        except BaseException as e:  # noqa: BLE001
+            self.errors.append((loc, e))
+
+    def run(self) -> dict[str, dict[str, Any]]:
+        threads = [
+            threading.Thread(target=self._run_location, args=(loc,), daemon=True)
+            for loc in sorted(self.programs)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(self.timeout_s)
+            if th.is_alive():
+                # A peer's failure (e.g. a sender exhausting channel
+                # retries) leaves blocked receivers behind — report the
+                # root cause, not the stuck thread it orphaned.
+                self._raise_first_error()
+                raise TimeoutError("a location thread did not finish")
+        self._raise_first_error()
+        return self.data
+
+    def _raise_first_error(self) -> None:
+        if self.errors:
+            loc, err = self.errors[0]
+            raise RuntimeError(f"location {loc} failed: {err!r}") from err
+
+
 class ThreadedRuntime:
-    """Run one thread per location; each interprets only its own bundle."""
+    """Run one thread per location; each interprets only its own bundle.
+
+    Deprecated tree-walking reference oracle — the staged pipeline's
+    ``threaded`` backend interprets the execution IR via
+    :class:`ThreadedProgramRuntime` instead.
+    """
 
     def __init__(
         self,

@@ -1,8 +1,12 @@
-"""Bundle compiler (§5): in-memory bundles + generated Python sources."""
+"""Bundle compiler (§5): program-IR emission + legacy bundle shims."""
 
+import pytest
+
+from repro import swirl
 from repro.core import encode, optimize
 from repro.core.compile import compile_bundles, emit_all, emit_python_source
 from repro.core.translate import genomes_1000
+from repro.exec import emit_location_source, emit_program_sources
 from repro.workflow import ChannelRegistry, Runtime
 
 from conftest import identity_step_fns
@@ -39,8 +43,9 @@ def test_missing_step_fn_rejected():
 
 
 def test_generated_source_executes_like_runtime():
-    """The emitted standalone Python bundles compute the same payloads as
-    the reduction-semantics runtime (decentralised == centralised)."""
+    """The standalone Python bundles emitted from the program IR compute
+    the same payloads as the reduction-semantics runtime (decentralised ==
+    centralised)."""
     import threading
 
     inst, w, fns, init = _genomes()
@@ -48,7 +53,7 @@ def test_generated_source_executes_like_runtime():
     rt = Runtime(w, fns, initial_payloads=init)
     rt.run()
 
-    sources = emit_all(w)
+    sources = emit_program_sources(swirl.trace(w).exec_program())
     programs = {}
     for loc, src in sources.items():
         ns: dict = {}
@@ -88,10 +93,19 @@ def test_generated_source_executes_like_runtime():
 
 def test_source_is_self_contained():
     _, w, _, _ = _genomes()
-    src = emit_python_source(
-        compile_bundles(w, identity_step_fns(genomes_1000(n=3, m=2, a=2, b=2, c=2)))[
-            "l^d"
-        ]
-    )
+    src = emit_location_source(swirl.trace(w).exec_program()["l^d"])
     assert "def run(channels, steps, initial_data):" in src
     compile(src, "<bundle>", "exec")  # syntactically valid standalone module
+
+
+def test_legacy_emitters_warn_and_match_program_ir():
+    """The old bundle entry points warn and delegate to the program IR."""
+    _, w, fns, _ = _genomes()
+    program = swirl.trace(w).exec_program()
+    bundles = compile_bundles(w, fns)
+    with pytest.warns(DeprecationWarning, match="emit_python_source"):
+        legacy = emit_python_source(bundles["l^IM"])
+    assert legacy == emit_location_source(program["l^IM"])
+    with pytest.warns(DeprecationWarning, match="emit_all"):
+        legacy_all = emit_all(w)
+    assert legacy_all == emit_program_sources(program)

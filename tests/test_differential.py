@@ -2,10 +2,18 @@
 
 Random layered DAG workflows (5–20 steps, random fan-in/out, random
 location counts, occasional spatial constraints) go through
-trace → optimize → lower on **every registered backend** — including the
-multiprocess backend's real OS processes — and must produce identical
+trace → optimize → lower on **every registered backend** — all of which
+interpret the flat per-location program IR of :mod:`repro.exec`, including
+the multiprocess backend's real OS processes — and must produce identical
 final data stores.  The R1R2/R3-rewritten plan must also match the
 unrewritten plan on every backend (the Thm.-1 guarantee made observable).
+
+The flat-program interpreters are additionally checked against the
+**legacy tree-walking oracles** kept for exactly this purpose: the
+decentralised bundle interpreter (``ThreadedRuntime`` over
+``compile_bundles`` output) and the reduction-semantics runtime
+(``Runtime``) — flat-program execution ≡ legacy bundle execution on every
+sampled DAG, rewritten and unrewritten.
 
 Two generators drive the same property:
 
@@ -23,6 +31,7 @@ import pytest
 from conftest import given, identity_step_fns, instances, settings
 
 from repro import swirl
+from repro._compat import suppress_deprecations
 from repro.backends import available_backends
 from repro.core.graph import DistributedWorkflowInstance, make_workflow
 
@@ -136,6 +145,75 @@ class TestSeededSweep:
             inst = random_instance(random.Random(seed))
             assert 5 <= len(inst.workflow.steps) <= 20
             assert 1 <= len(inst.locations) <= 4
+
+
+# ---------------------------------------------------------------------------
+# Flat-program execution ≡ legacy bundle / reduction execution
+# ---------------------------------------------------------------------------
+
+
+def _legacy_threaded(plan, inst) -> dict:
+    """Run via the deprecated tree-walking bundle interpreter (oracle)."""
+    from repro.core.compile import build_bundles
+    from repro.workflow.threaded import ThreadedRuntime
+
+    fns = identity_step_fns(inst)
+    with suppress_deprecations():
+        bundles = build_bundles(plan.system, fns)
+        rt = ThreadedRuntime(bundles, timeout_s=60)
+        data = rt.run()
+    return {loc: dict(d) for loc, d in data.items()}
+
+
+def _legacy_reduction(plan, inst) -> dict:
+    """Run via the deprecated reduction-semantics runtime (oracle)."""
+    from repro.workflow.runtime import Runtime
+
+    fns = identity_step_fns(inst)
+    with suppress_deprecations():
+        rt = Runtime(plan.system, fns)
+        rt.run()
+    return {
+        loc: rt.location_data(loc) for loc in plan.system.locations()
+    }
+
+
+class TestFlatProgramVsLegacyOracles:
+    """The program-IR interpreters match the retired tree walkers."""
+
+    @pytest.mark.parametrize("chunk", range(5))
+    def test_threaded_program_matches_tree_bundles(self, chunk):
+        for i in range(4):
+            rng = random.Random(7000 * chunk + i)
+            inst = random_instance(rng)
+            for plan in self._plans(inst):
+                got = _run(plan, inst, "threaded")
+                want = _legacy_threaded(plan, inst)
+                assert got == want, (
+                    "flat-program threaded execution diverged from the "
+                    "legacy bundle interpreter"
+                )
+
+    @pytest.mark.parametrize("chunk", range(5))
+    def test_inprocess_program_matches_reduction_runtime(self, chunk):
+        for i in range(4):
+            rng = random.Random(9000 * chunk + i)
+            inst = random_instance(rng)
+            for plan in self._plans(inst):
+                got = _run(plan, inst, "inprocess")
+                want = _legacy_reduction(plan, inst)
+                # The reduction oracle only stores payloads it produced;
+                # the backend also reports empty scopes per location.
+                for loc, payloads in want.items():
+                    assert got.get(loc, {}) == payloads, (
+                        "flat-program inprocess execution diverged from "
+                        "the reduction-semantics oracle"
+                    )
+
+    @staticmethod
+    def _plans(inst):
+        raw = swirl.trace(inst)
+        return (raw, raw.optimize(("R1R2", "R3")))
 
 
 # ---------------------------------------------------------------------------

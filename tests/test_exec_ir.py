@@ -1,0 +1,396 @@
+"""Execution IR (repro.exec): lowering, cursors, run-many serving.
+
+Covers the tentpole contracts of the program-IR refactor:
+
+* lowering is lossless (``exec_program().system == plan.system`` exactly)
+  and resolves endpoints / step bindings / leadership;
+* every backend's compiled artifact interprets the *same* shared
+  ``ExecProgram`` (compile-once, no per-backend re-derivation);
+* ``FlatTrace.compact`` (the core op-array export) honours deletions and
+  smart-constructor identities;
+* ``Cursor`` implements the active-occurrence semantics incrementally;
+* ``Executable.run_many`` amortises one lowered program over a batch with
+  correct results in input order, and its re-entry guard composes: whole
+  batches are mutually exclusive, internal instance parallelism is not.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+from conftest import identity_step_fns
+
+from repro import swirl
+from repro.api import ConcurrentRunError
+from repro.backends import available_backends
+from repro.core.compile import StepMeta
+from repro.core.flat import FlatTrace
+from repro.core.parser import parse_trace
+from repro.core.syntax import Exec, Recv, Send, actions
+from repro.core.translate import genomes_1000
+from repro.exec import Cursor, ExecOp, RecvOp, SendOp, lower_system, to_action
+
+EDGES = {
+    "preprocess": ["train_a", "train_b"],
+    "train_a": ["evaluate"],
+    "train_b": ["evaluate"],
+    "evaluate": ["report"],
+    "report": [],
+}
+MAPPING = {
+    "preprocess": ("cpu0",),
+    "train_a": ("gpu0",),
+    "train_b": ("gpu1",),
+    "evaluate": ("gpu0",),
+    "report": ("cpu0",),
+}
+
+
+def quickstart_plan():
+    return swirl.trace(EDGES, mapping=MAPPING).optimize()
+
+
+def quickstart_steps():
+    return {
+        "preprocess": lambda inp: {"d^preprocess": list(range(10))},
+        "train_a": lambda inp: {"d^train_a": sum(inp["d^preprocess"])},
+        "train_b": lambda inp: {"d^train_b": max(inp["d^preprocess"])},
+        "evaluate": lambda inp: {
+            "d^evaluate": inp["d^train_a"] + inp["d^train_b"]
+        },
+        "report": lambda inp: {},
+    }
+
+
+def _genomes(n=2, m=2):
+    inst = genomes_1000(n=n, m=m, a=1, b=1, c=1)
+    fns = identity_step_fns(inst)
+    init = {("l^d", d): f"raw:{d}" for d in inst.g("l^d")}
+    return inst, fns, init
+
+
+def _seeded_instance():
+    """A workflow whose source step *consumes* per-instance initial data,
+    so distinct ``run_many`` inputs must surface in distinct results."""
+    from repro.core.graph import DistributedWorkflowInstance, make_workflow
+
+    wf = make_workflow(
+        ["ingest", "transform"],
+        ["p_seed", "p_ingest"],
+        [
+            ("p_seed", "ingest"),
+            ("ingest", "p_ingest"),
+            ("p_ingest", "transform"),
+        ],
+    )
+    inst = DistributedWorkflowInstance(
+        workflow=wf,
+        locations=frozenset({"l0", "l1"}),
+        mapping={"ingest": ("l0",), "transform": ("l1",)},
+        data=frozenset({"d_seed", "d_ingest"}),
+        placement={"d_seed": "p_seed", "d_ingest": "p_ingest"},
+        initial_data={"l0": frozenset({"d_seed"})},
+    )
+    return inst, identity_step_fns(inst)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+class TestLowering:
+    def test_roundtrip_is_exact(self):
+        for plan in (
+            quickstart_plan(),
+            swirl.trace(genomes_1000(n=3, m=2, a=2, b=2, c=2)).optimize(
+                ("R1R2", "R3")
+            ),
+        ):
+            program = lower_system(plan.system)
+            assert program.system == plan.system
+
+    def test_ops_follow_program_order(self):
+        plan = quickstart_plan()
+        program = plan.exec_program()
+        for cfg in plan.system.configs:
+            lp = program[cfg.location]
+            assert [to_action(op) for op in lp.ops] == list(
+                actions(cfg.trace)
+            )
+
+    def test_resolution(self):
+        plan = quickstart_plan()
+        program = plan.exec_program()
+        for lp in program.programs:
+            for op in lp.ops:
+                if isinstance(op, (SendOp, RecvOp)):
+                    assert op.endpoint == (op.src, op.dst, op.port)
+                elif isinstance(op, ExecOp):
+                    assert list(op.inputs) == sorted(op.inputs)
+                    assert op.leader == (
+                        lp.location == min(op.locations)
+                    )
+        assert program.placement() == plan.placement()
+        # Every endpoint appears on both sides exactly once in channels().
+        eps = program.channels()
+        assert len(eps) == len(set(eps))
+
+    def test_leader_unique_per_spatial_step(self):
+        mapping = dict(MAPPING, evaluate=("gpu0", "gpu1"))
+        plan = swirl.trace(EDGES, mapping=mapping).optimize()
+        program = plan.exec_program()
+        leaders = [
+            lp.location
+            for lp in program.programs
+            for op in lp.exec_ops()
+            if op.step == "evaluate" and op.leader
+        ]
+        assert leaders == ["gpu0"]
+
+    def test_exec_program_cached_on_plan(self):
+        plan = quickstart_plan()
+        assert plan.exec_program() is plan.exec_program()
+
+    def test_every_backend_shares_the_plan_program(self):
+        plan = quickstart_plan()
+        steps = quickstart_steps()
+        for name in available_backends():
+            exe = plan.lower(name).compile(steps)
+            assert exe.program.program is plan.exec_program(), name
+
+    def test_legacy_system_compile_is_coerced(self):
+        from repro.backends import get_backend
+
+        plan = quickstart_plan()
+        metas = {
+            name: StepMeta(fn=fn)
+            for name, fn in quickstart_steps().items()
+        }
+        program = get_backend("inprocess").compile(plan.system, metas, {})
+        result = program.run()
+        assert result.payload("cpu0", "d^evaluate") == 54
+
+
+# ---------------------------------------------------------------------------
+# FlatTrace.compact — the core op-array export
+# ---------------------------------------------------------------------------
+
+
+class TestCompact:
+    def test_compact_matches_rebuild(self):
+        trace = parse_trace(
+            "exec(a,{}->{x},{l}).(send(x->p,l,m) | recv(q,m,l)).0"
+        )
+        flat = FlatTrace.from_trace(trace)
+        # Kill one action and compare against the tree reconstruction.
+        flat.alive[1] = False
+        compacted = flat.compact()
+        assert compacted.rebuild() == flat.rebuild()
+        assert all(compacted.alive)
+        assert len(compacted.actions) == 2
+
+    def test_compact_of_live_trace_is_lossless(self):
+        _, w, *_ = (None, quickstart_plan().system)
+        for cfg in w.configs:
+            flat = FlatTrace.from_trace(cfg.trace)
+            assert flat.compact().rebuild() == cfg.trace
+
+
+# ---------------------------------------------------------------------------
+# Cursor
+# ---------------------------------------------------------------------------
+
+
+class TestCursor:
+    def _program(self, text: str):
+        from repro.core.syntax import LocationConfig, WorkflowSystem
+
+        trace = parse_trace(text)
+        system = WorkflowSystem(
+            (LocationConfig("l", frozenset(), trace),)
+        )
+        return lower_system(system)["l"]
+
+    def test_sequence_gates_successors(self):
+        lp = self._program("send(x->p,l,m).send(y->q,l,m).send(z->r,l,m)")
+        cur = Cursor(lp)
+        assert cur.enabled_ops() == [0]
+        cur.complete(0)
+        assert cur.enabled_ops() == [1]
+        cur.complete(1)
+        cur.complete(2)
+        assert cur.finished()
+
+    def test_par_exposes_all_branches(self):
+        lp = self._program(
+            "(send(x->p,l,m) | send(y->q,l,m)).send(z->r,l,m)"
+        )
+        cur = Cursor(lp)
+        assert cur.enabled_ops() == [0, 1]
+        cur.complete(1)
+        assert cur.enabled_ops() == [0]
+        cur.complete(0)
+        assert cur.enabled_ops() == [2]
+        cur.complete(2)
+        assert cur.finished()
+
+    def test_complete_requires_active(self):
+        lp = self._program("send(x->p,l,m).send(y->q,l,m)")
+        cur = Cursor(lp)
+        with pytest.raises(ValueError, match="not active"):
+            cur.complete(1)
+
+    def test_done_flags_drive_remaining_system(self):
+        plan = quickstart_plan()
+        program = plan.exec_program()
+        cursors = {
+            lp.location: Cursor(lp) for lp in program.programs
+        }
+        # Nothing done: the remaining term is the whole plan.
+        remaining = program.remaining_system(
+            {l: c.done_flags() for l, c in cursors.items()}
+        )
+        assert remaining.canonical() == plan.system.canonical()
+        # Everything done: the remaining term is terminated.
+        for lp in program.programs:
+            cur = cursors[lp.location]
+            while not cur.finished():
+                cur.complete(cur.enabled_ops()[0])
+        remaining = program.remaining_system(
+            {l: c.done_flags() for l, c in cursors.items()}
+        )
+        assert remaining.is_terminated()
+
+
+# ---------------------------------------------------------------------------
+# run_many — compile-once / run-many serving
+# ---------------------------------------------------------------------------
+
+SERVE_BACKENDS = [b for b in ("inprocess", "threaded", "jax")
+                  if b in available_backends()]
+
+
+class TestRunMany:
+    @pytest.mark.parametrize("backend", SERVE_BACKENDS)
+    def test_results_match_individual_runs(self, backend):
+        inst, fns, init = _genomes()
+        plan = swirl.trace(inst).optimize()
+        exe = plan.lower(backend).compile(fns)
+        inputs = [
+            {k: f"inst{i}:{v}" for k, v in init.items()} for i in range(6)
+        ]
+        batch = exe.run_many(inputs, max_concurrent=3)
+        assert len(batch) == 6
+        for i, result in enumerate(batch):
+            solo = (
+                plan.lower(backend)
+                .compile(fns)
+                .run(initial_payloads=inputs[i])
+            )
+            assert result.data == solo.data, f"instance {i} diverged"
+
+    def test_results_in_input_order_no_cross_instance_leaks(self):
+        inst, fns = _seeded_instance()
+        exe = swirl.trace(inst).optimize().lower("threaded").compile(fns)
+        inputs = [
+            {("l0", "d_seed"): f"inst{i}"} for i in range(8)
+        ]
+        batch = exe.run_many(inputs, max_concurrent=8)
+        for i, result in enumerate(batch):
+            # ingest(d_seed=inst{i}) flows through the shared transport to
+            # l1 — the right instance's payload, nobody else's.
+            got = result.payload("l1", "d_ingest")
+            assert got == f"ingest(d_seed=inst{i})", got
+
+    @pytest.mark.skipif(
+        "multiprocess" not in available_backends(),
+        reason="multiprocess backend unavailable",
+    )
+    def test_multiprocess_batches_serialise_safely(self):
+        """run_many on the process backend: instances are serialised (each
+        run owns the shared snapshot state and a full worker fleet) but
+        results still come back per instance, in order."""
+        inst, fns = _seeded_instance()
+        plan = swirl.trace(inst).optimize()
+        exe = plan.lower("multiprocess", timeout_s=60).compile(fns)
+        inputs = [{("l0", "d_seed"): f"inst{i}"} for i in range(2)]
+        batch = exe.run_many(inputs, max_concurrent=2)
+        for i, result in enumerate(batch):
+            assert result.payload("l1", "d_ingest") == (
+                f"ingest(d_seed=inst{i})"
+            )
+
+    def test_empty_batch(self):
+        plan = quickstart_plan()
+        exe = plan.lower("threaded").compile(quickstart_steps())
+        assert exe.run_many([]) == []
+
+    def test_invalid_concurrency_rejected(self):
+        plan = quickstart_plan()
+        exe = plan.lower("threaded").compile(quickstart_steps())
+        with pytest.raises(ValueError, match="max_concurrent"):
+            exe.run_many([None], max_concurrent=0)
+
+    def test_instance_failure_propagates(self):
+        plan = quickstart_plan()
+        steps = dict(quickstart_steps())
+
+        def boom(inp):
+            raise RuntimeError("boom")
+
+        steps["evaluate"] = boom
+        exe = plan.lower("threaded", timeout_s=5).compile(steps)
+        with pytest.raises(RuntimeError):
+            exe.run_many([None, None], max_concurrent=2)
+        # The guard was released — the executable is reusable.
+        good = plan.lower("threaded").compile(quickstart_steps())
+        assert good.run().payload("cpu0", "d^evaluate") == 54
+
+
+class TestRunManyGuard:
+    def _slow_batch_exe(self, started, release):
+        plan = quickstart_plan()
+        steps = dict(quickstart_steps())
+
+        def slow_preprocess(inp):
+            started.set()
+            assert release.wait(20)
+            return {"d^preprocess": list(range(10))}
+
+        steps["preprocess"] = slow_preprocess
+        return plan.lower("threaded").compile(steps)
+
+    def test_concurrent_batches_rejected(self):
+        started, release = threading.Event(), threading.Event()
+        exe = self._slow_batch_exe(started, release)
+        results = {}
+
+        def batch():
+            results["batch"] = exe.run_many([None, None], max_concurrent=2)
+
+        t = threading.Thread(target=batch, daemon=True)
+        t.start()
+        assert started.wait(10)
+        try:
+            with pytest.raises(ConcurrentRunError):
+                exe.run_many([None])
+            with pytest.raises(ConcurrentRunError):
+                exe.run()
+        finally:
+            release.set()
+            t.join(30)
+        assert len(results["batch"]) == 2
+        for r in results["batch"]:
+            assert r.payload("cpu0", "d^evaluate") == 54
+        # After the batch drains, the guard is free again.
+        assert exe.run_many([None])[0].payload("cpu0", "d^evaluate") == 54
+
+    def test_internal_parallelism_not_rejected(self):
+        """max_concurrent > 1 must not trip the re-entry guard."""
+        plan = quickstart_plan()
+        exe = plan.lower("threaded").compile(quickstart_steps())
+        batch = exe.run_many([None] * 6, max_concurrent=6)
+        assert [r.payload("cpu0", "d^evaluate") for r in batch] == [54] * 6
