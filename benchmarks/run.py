@@ -19,6 +19,10 @@ Prints ``name,value,unit,derived`` CSV rows.  Sections:
 * ``serve``     — compile-once/run-many serving throughput: 100 workflow
   instances over one lowered program (``Executable.run_many``, shared
   transport) vs the naive per-instance trace→lower→compile→run loop;
+* ``gateway``   — workflow-as-a-service over HTTP (repro.serve): sustained
+  cache-hit throughput across mixed plan shapes from concurrent keep-alive
+  clients (p50/p99 + hit rate), plus an overload run (429s counted, zero
+  dropped in-flight executions);
 * ``bisim``     — LTS sizes + exact bisimulation check time (Thm. 1);
 * ``kernels``   — Pallas kernels (interpret mode) vs jnp references;
 * ``train``     — SWIRL-planned trainer steps/s (smoke config);
@@ -404,6 +408,210 @@ def bench_serve() -> None:
     )
 
 
+def bench_gateway() -> None:
+    """Workflow-as-a-service over HTTP: cache-hit serving + overload.
+
+    Phase 1 submits three differently-shaped workflows (1-location chain,
+    3-location diamond, 3-location fan-out), then drives a mixed stream of
+    ``run_many`` batches from several keep-alive HTTP clients against the
+    cached fingerprints — every request is a content-address cache hit.
+    Acceptance: sustained >= 1000 instances/s aggregate, p50/p99 request
+    latency and cache hit rate reported.
+
+    Phase 2 overloads a tight tenant quota (2 in flight + 2 queued) with
+    30 concurrent runs: the shed requests 429, every admitted run
+    completes, and graceful close drains with nothing dropped.
+    """
+    import threading
+
+    from repro.serve import (
+        Gateway,
+        GatewayClient,
+        GatewayError,
+        TenantConfig,
+        WorkflowService,
+    )
+
+    shapes = {
+        "chain": {
+            "dag": {
+                "edges": {"c_a": ["c_b"], "c_b": []},
+                "mapping": {"c_a": ["l0"], "c_b": ["l0"]},
+            }
+        },
+        "diamond": {
+            "dag": {
+                "edges": {
+                    "d_pre": ["d_x", "d_y"],
+                    "d_x": ["d_merge"],
+                    "d_y": ["d_merge"],
+                    "d_merge": [],
+                },
+                "mapping": {
+                    "d_pre": ["l0"],
+                    "d_x": ["l1"],
+                    "d_y": ["l2"],
+                    "d_merge": ["l0"],
+                },
+            }
+        },
+        "fan": {
+            "dag": {
+                "edges": {
+                    "f_src": ["f_w1", "f_w2", "f_w3", "f_w4"],
+                    "f_w1": [],
+                    "f_w2": [],
+                    "f_w3": [],
+                    "f_w4": [],
+                },
+                "mapping": {
+                    "f_src": ["l0"],
+                    "f_w1": ["l1"],
+                    "f_w2": ["l1"],
+                    "f_w3": ["l2"],
+                    "f_w4": ["l2"],
+                },
+            }
+        },
+    }
+
+    def _steps():
+        registry = {}
+        for body in shapes.values():
+            for s, succs in body["dag"]["edges"].items():
+                if succs:
+                    registry[s] = (
+                        lambda inp, _d=f"d^{s}": {_d: 1}
+                    )
+                else:
+                    registry[s] = lambda inp: {}
+        return registry
+
+    svc = WorkflowService(
+        _steps(),
+        tenants=[
+            TenantConfig(
+                "bench", api_key="bench", max_concurrent=64, max_queue=256
+            )
+        ],
+        batch_max_concurrent=8,
+    )
+    n_clients, batches_per_client, batch_size = 6, 4, 50
+    n_instances = n_clients * batches_per_client * batch_size
+    latencies: list[float] = []
+    lock = threading.Lock()
+    with Gateway(svc) as gw:
+        with GatewayClient(gw.url, api_key="bench") as c:
+            fps = [
+                c.submit(body)["fingerprint"] for body in shapes.values()
+            ]
+            for body in shapes.values():  # resubmits: source-digest hits
+                assert c.submit(body)["cached"]
+
+        def worker(i: int) -> None:
+            with GatewayClient(gw.url, api_key="bench") as c:
+                for b in range(batches_per_client):
+                    fp = fps[(i + b) % len(fps)]  # mixed plan shapes
+                    t0 = time.perf_counter()
+                    r = c.run_many(fp, [{}] * batch_size)
+                    dt = time.perf_counter() - t0
+                    assert len(r["results"]) == batch_size
+                    with lock:
+                        latencies.append(dt)
+
+        t0 = time.perf_counter()
+        threads = [
+            threading.Thread(target=worker, args=(i,))
+            for i in range(n_clients)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        stats = svc.stats()
+
+    ips = n_instances / wall
+    lat = np.array(sorted(latencies))
+    hit_rate = stats["cache"]["hit_rate"]
+    row(
+        "gateway/cache_hit_ips", f"{ips:.0f}", "instances/s",
+        f"{n_instances} instances, {n_clients} HTTP clients, "
+        f"3 shapes, batch={batch_size} (target >= 1000)",
+    )
+    row(
+        "gateway/request_p50", f"{np.percentile(lat, 50) * 1e3:.1f}", "ms",
+        f"run_many batch of {batch_size}",
+    )
+    row(
+        "gateway/request_p99", f"{np.percentile(lat, 99) * 1e3:.1f}", "ms",
+        f"n={len(lat)} requests",
+    )
+    row(
+        "gateway/cache_hit_rate", f"{hit_rate:.3f}", "",
+        f"compiles={stats['counters']['compiles']} of "
+        f"{stats['counters']['submissions']} submissions",
+    )
+    assert stats["counters"]["instances_failed"] == 0
+
+    # -- overload: tight quota, concurrent burst -----------------------------
+    slow = WorkflowService(
+        {
+            "s_a": lambda inp: (time.sleep(0.05), {"d^s_a": 1})[1],
+            "s_b": lambda inp: {},
+        },
+        tenants=[
+            TenantConfig(
+                "tight", api_key="tight", max_concurrent=2, max_queue=2
+            )
+        ],
+    )
+    burst = 30
+    outcome = {"ok": 0, "429": 0}
+    gw2 = Gateway(slow).start()
+    with GatewayClient(gw2.url, api_key="tight") as c:
+        fp = c.submit(
+            {
+                "dag": {
+                    "edges": {"s_a": ["s_b"], "s_b": []},
+                    "mapping": {"s_a": ["l0"], "s_b": ["l0"]},
+                }
+            }
+        )["fingerprint"]
+
+    def overload_worker() -> None:
+        with GatewayClient(gw2.url, api_key="tight") as c:
+            try:
+                c.run(fp)
+                with lock:
+                    outcome["ok"] += 1
+            except GatewayError as e:
+                assert e.status == 429 and e.retry_after >= 1
+                with lock:
+                    outcome["429"] += 1
+
+    threads = [
+        threading.Thread(target=overload_worker) for _ in range(burst)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    drained = gw2.close(drain_timeout_s=10)
+    counters = slow.stats()["counters"]
+    assert outcome["ok"] + outcome["429"] == burst
+    assert counters["instances_completed"] == outcome["ok"]
+    assert counters["instances_failed"] == 0 and drained
+    row(
+        "gateway/overload_429", outcome["429"], "requests",
+        f"burst={burst}, quota 2+2, served={outcome['ok']}",
+    )
+    row(
+        "gateway/overload_dropped", 0, "runs",
+        f"drained={drained}; every admitted run completed",
+    )
+
+
 def bench_bisim() -> None:
     from repro.core import encode, rewrite_system, weak_barbed_bisimilar
     from repro.core.semantics import reachable_states
@@ -486,6 +694,7 @@ SECTIONS = {
     "sched": bench_sched,
     "compile": bench_compile,
     "serve": bench_serve,
+    "gateway": bench_gateway,
     "bisim": bench_bisim,
     "kernels": bench_kernels,
     "train": bench_train,

@@ -22,6 +22,7 @@ _SUBMODULES = (
     "core",
     "exec",
     "sched",
+    "serve",
     "swirl",
     "workflow",
 )

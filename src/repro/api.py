@@ -37,6 +37,7 @@ process count and the wire.
 
 from __future__ import annotations
 
+import hashlib
 import os
 import threading
 import time
@@ -71,6 +72,7 @@ __all__ = [
     "ExecutionResult",
     "ConcurrentRunError",
     "clear_compile_cache",
+    "compile_cache_stats",
 ]
 
 
@@ -175,16 +177,36 @@ _DERIVE_CACHE_MAX = 32
 #: under this lock (an unlocked hit could be evicted by a concurrent
 #: insert between ``get`` and ``move_to_end``).
 _DERIVE_CACHE_LOCK = threading.Lock()
+#: Hit/miss/eviction counters for the derive cache, reported by
+#: :func:`compile_cache_stats` (and the serving gateway's ``/v1/stats``).
+_DERIVE_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0, "clears": 0}
+#: Bumped by :func:`clear_compile_cache`.  Live :class:`Plan` values stamp
+#: their memoised ``exec_program()`` with the generation it was computed
+#: under; a stale stamp means the user asked for the memory back, so the
+#: program is re-derived instead of served from the plan's own cache —
+#: the module LRU and the per-plan memos stay coherent.
+_CACHE_GENERATION = 0
 
 
 def clear_compile_cache() -> None:
-    """Drop every cached derivation (see ``_DERIVE_CACHE``).
+    """Drop every cached derivation — the module LRU *and* per-plan memos.
 
     Useful in long-running processes that sweep many large distinct plans
-    and want the memory back deterministically.
+    and want the memory back deterministically.  Also invalidates the
+    cached :meth:`Plan.exec_program` of every live plan (they re-derive on
+    next use), so clearing really does release the lowered programs too.
     """
+    global _CACHE_GENERATION
     with _DERIVE_CACHE_LOCK:
         _DERIVE_CACHE.clear()
+        _CACHE_GENERATION += 1
+        _DERIVE_CACHE_STATS["clears"] += 1
+
+
+def compile_cache_stats() -> dict[str, int]:
+    """Snapshot of the derive-cache counters (entries, hits, misses, …)."""
+    with _DERIVE_CACHE_LOCK:
+        return dict(_DERIVE_CACHE_STATS, entries=len(_DERIVE_CACHE))
 
 
 def _instance_key(inst: DistributedWorkflowInstance) -> tuple:
@@ -215,6 +237,9 @@ def _derive_plan(
         hit = _DERIVE_CACHE.get(key)
         if hit is not None:
             _DERIVE_CACHE.move_to_end(key)
+            _DERIVE_CACHE_STATS["hits"] += 1
+        else:
+            _DERIVE_CACHE_STATS["misses"] += 1
     if hit is not None:
         system, origin, rewrites = hit
         return Plan(
@@ -234,6 +259,7 @@ def _derive_plan(
         _DERIVE_CACHE[key] = (plan.system, plan.origin, plan.rewrites)
         while len(_DERIVE_CACHE) > _DERIVE_CACHE_MAX:
             _DERIVE_CACHE.popitem(last=False)
+            _DERIVE_CACHE_STATS["evictions"] += 1
     return plan
 
 
@@ -396,23 +422,64 @@ class Plan:
             self.__dict__["_placement"] = cached
         return dict(cached)
 
+    def fingerprint(self) -> str:
+        """Content-addressed identity of this plan (stable public API).
+
+        A hex SHA-256 digest of the canonical ``.swirl`` text of the
+        (possibly rewritten) system plus the names of the rewrite rules
+        applied to reach it.  The contract:
+
+        * **Equality** — two plans whose systems are equal (same traces,
+          same placement ``M``, same data scopes) and that were optimised
+          with the same rule list have equal fingerprints, across
+          processes and sessions (no ``PYTHONHASHSEED`` dependence).
+        * **Sensitivity** — anything that changes the lowered artifact
+          changes the fingerprint: a different step→location placement, a
+          rewrite that removes communications, added/removed steps or
+          data.  Applying a rule that happens to be a no-op still changes
+          the fingerprint (the rule list is part of the identity), so a
+          fingerprint names one *pipeline output*, not an equivalence
+          class.
+        * **Versioning** — stable within a release of this package; the
+          leading ``swirl-plan-v1`` tag is bumped if the canonical text or
+          encoding ever changes, so digests from different contracts can
+          never collide silently.
+
+        This is the key of the serving gateway's content-addressed plan
+        cache (:mod:`repro.serve`): submit once, then address the compiled
+        artifact by fingerprint.
+        """
+        cached = self.__dict__.get("_fingerprint")
+        if cached is None:
+            from repro.core.parser import dumps
+
+            h = hashlib.sha256()
+            h.update(b"swirl-plan-v1\n")
+            h.update(",".join(r.rule for r in self.rewrites).encode())
+            h.update(b"\n")
+            h.update(dumps(self.system).encode())
+            cached = h.hexdigest()
+            self.__dict__["_fingerprint"] = cached
+        return cached
+
     def exec_program(self):
         """The plan lowered to the execution IR (:mod:`repro.exec`).
 
         Computed once per plan and shared by every backend lowered from it
         (the per-location op arrays are backend-agnostic), so fanning one
         plan out to several backends — or compiling several Executables —
-        never re-derives the programs.
+        never re-derives the programs.  :func:`clear_compile_cache`
+        invalidates the memo (the stored generation stamp goes stale) so
+        the module LRU and per-plan caches release memory together.
         """
         from repro.exec.program import lower_system
 
         cached = self.__dict__.get("_exec_program")
-        if cached is None:
-            cached = lower_system(
-                self.system, schedule=self.schedule_report
-            )
-            self.__dict__["_exec_program"] = cached
-        return cached
+        if cached is not None and cached[0] == _CACHE_GENERATION:
+            return cached[1]
+        program = lower_system(self.system, schedule=self.schedule_report)
+        self.__dict__["_exec_program"] = (_CACHE_GENERATION, program)
+        return program
 
     # -- scheduling ---------------------------------------------------------
     def schedule(
@@ -671,13 +738,24 @@ class Lowered:
 class Executable:
     """A compiled workflow: run it (once or in batches), snapshot, resume.
 
-    One Executable owns one mutable :class:`BackendProgram`, so *whole
-    runs* must not overlap: a second :meth:`run`/:meth:`run_async`/
-    :meth:`run_many` while one is in flight raises
-    :class:`ConcurrentRunError` (compile a second Executable from the same
-    :class:`Lowered` to run concurrently).  A :meth:`run_many` batch counts
-    as one run — its *internal* instance parallelism happens below the
-    guard and is never rejected.
+    One Executable owns one :class:`BackendProgram`.  Whether *whole runs*
+    may overlap is the backend's call
+    (:meth:`~repro.backends.base.BackendProgram.concurrent_batches`):
+
+    * backends whose runs are fully isolated (the ``threaded`` backend —
+      fresh per-run transports, per-batch/per-instance endpoint
+      namespaces) serve any number of concurrent :meth:`run`/
+      :meth:`run_many` calls on one compiled Executable, which is what
+      the serving gateway's cache-hit hot path relies on;
+    * backends whose runs mutate program-level state (``inprocess``
+      snapshot slots, the ``multiprocess`` worker fleet, ``jax`` device
+      buffers) keep the exclusive guard — a second overlapping run raises
+      :class:`ConcurrentRunError` (compile another Executable from the
+      same :class:`Lowered` to run concurrently).
+
+    In both regimes a :meth:`run_many` batch counts as one run — its
+    *internal* instance parallelism happens below the guard and is never
+    rejected.
     """
 
     plan: Plan
@@ -686,22 +764,33 @@ class Executable:
     _run_lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False, compare=False
     )
-    _running: bool = field(default=False, repr=False, compare=False)
+    _active_runs: int = field(default=0, repr=False, compare=False)
+
+    @property
+    def concurrent_runs(self) -> bool:
+        """True when whole runs on this Executable may safely overlap."""
+        return self.program.concurrent_batches()
+
+    @property
+    def active_runs(self) -> int:
+        """Whole runs currently in flight (introspection/drain support)."""
+        with self._run_lock:
+            return self._active_runs
 
     def _enter_run(self, what: str) -> None:
         with self._run_lock:
-            if self._running:
+            if self._active_runs and not self.program.concurrent_batches():
                 raise ConcurrentRunError(
                     f"this Executable ({self.backend_name!r}) is already "
                     f"running; an overlapping {what} would share one "
                     "mutable BackendProgram — wait for the in-flight run, "
                     "or compile() another Executable from the same Lowered"
                 )
-            self._running = True
+            self._active_runs += 1
 
     def _exit_run(self) -> None:
         with self._run_lock:
-            self._running = False
+            self._active_runs -= 1
 
     def run(
         self,

@@ -145,6 +145,19 @@ class BackendProgram(ABC):
         """Run one instance of a :meth:`run_many` batch (override-point)."""
         return self.run(initial_payloads)
 
+    def concurrent_batches(self) -> bool:
+        """Whether overlapping whole runs on this one program are safe.
+
+        ``False`` (the default) means a run mutates program-level state —
+        snapshot slots, a worker fleet, device buffers — so
+        :class:`repro.api.Executable` serialises whole runs behind its
+        re-entry guard.  Backends whose runs are fully isolated from each
+        other (fresh per-run transports, per-instance endpoint namespaces)
+        return ``True`` and one compiled Executable then serves many
+        concurrent batches — the serving gateway's cache-hit hot path.
+        """
+        return False
+
     # Optional capabilities — backends that support them override.
     def checkpoint(self):
         raise BackendCapabilityError(

@@ -557,6 +557,11 @@ class MultiprocessProgram(BackendProgram):
                             loc, step = last_exec.get(
                                 wid, (groups[wid][0], None)
                             )
+                            # The sentinel fires when the child exits, but
+                            # the exit *code* is only available once the
+                            # child is reaped — join first or a killed
+                            # worker races to exitcode=None.
+                            procs[wid].join(5)
                             failure = (
                                 "crash",
                                 wid,

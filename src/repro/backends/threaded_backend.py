@@ -10,11 +10,18 @@ the fault-tolerance experiments select their failure model.
 ``run_many`` shares **one** transport across the whole batch: each
 instance's channel endpoints are namespaced by an instance tag, so many
 workflow instances stream through the same wire concurrently while the
-compiled program is reused untouched.
+compiled program is reused untouched.  Tags carry a process-unique batch
+prefix (``b3.17`` = instance 17 of batch 3), so *whole batches* may also
+overlap: a compiled ``ThreadedProgram`` builds no mutable program-level
+state per run — every run gets its own transport (unless the caller passed
+a shared one) and its own runtimes — which is why it advertises
+``concurrent_batches`` and one Executable can serve many concurrent
+batches (the serving gateway's cache-hit hot path).
 """
 
 from __future__ import annotations
 
+import itertools
 from typing import Any, Mapping, Sequence
 
 from repro.core.compile import StepMeta
@@ -30,7 +37,20 @@ from .base import (
 )
 
 
+#: Process-unique batch sequence: prefixes every batch's instance tags so
+#: concurrent run_many batches can never collide on channel endpoints,
+#: even when the caller shares one transport across batches.
+_BATCH_SEQ = itertools.count()
+
+
 class ThreadedProgram(BackendProgram):
+    def concurrent_batches(self) -> bool:
+        # Runs are isolated by construction (fresh transport per run,
+        # batch-unique endpoint tags) — except when the caller supplied a
+        # shared transport/registry, where a concurrent *untagged* run()
+        # could collide with another run's endpoints.
+        return "transport" not in self.options and "channels" not in self.options
+
     def _make_transport(self, opts: dict[str, Any]):
         from repro.workflow.channels import ChannelRegistry
         from repro.workflow.transport import InMemoryTransport, Transport
@@ -144,6 +164,7 @@ class ThreadedProgram(BackendProgram):
         opts.pop("schedule", None)
         timeout_s = float(opts.pop("timeout_s", 60.0))
         transport = self._make_transport(opts)
+        batch_tag = f"b{next(_BATCH_SEQ)}"
         programs = self.program.by_location
         local_steps = self._local_steps()
         lanes = min(max_concurrent, len(inputs))
@@ -166,7 +187,7 @@ class ThreadedProgram(BackendProgram):
                 initial_payloads=payloads,
                 transport=transport,
                 timeout_s=timeout_s,
-                instance_tag=str(i),
+                instance_tag=f"{batch_tag}.{i}",
                 branch_pool=branch_pool,
                 validate=False,  # compile() already checked coverage
             )

@@ -49,7 +49,45 @@ _TOKEN_RE = re.compile(
 
 
 class SwirlSyntaxError(ValueError):
-    """Raised on malformed ``.swirl`` input, with position info."""
+    """Raised on malformed ``.swirl`` input, with position info.
+
+    Carries structured location attributes so front ends (the HTTP gateway,
+    editors) can point at the offending character without re-parsing the
+    message: ``offset`` is the 0-based character offset into the source,
+    ``line``/``column`` are 1-based when the source is known (``None``
+    otherwise).
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        offset: int | None = None,
+        line: int | None = None,
+        column: int | None = None,
+    ):
+        super().__init__(message)
+        self.offset = offset
+        self.line = line
+        self.column = column
+
+
+def _line_col(src: str, offset: int) -> tuple[int, int]:
+    """1-based (line, column) of character ``offset`` in ``src``."""
+    offset = min(max(offset, 0), len(src))
+    line = src.count("\n", 0, offset) + 1
+    column = offset - (src.rfind("\n", 0, offset) + 1) + 1
+    return line, column
+
+
+def _syntax_error(src: str, message: str, offset: int) -> SwirlSyntaxError:
+    line, column = _line_col(src, offset)
+    return SwirlSyntaxError(
+        f"{message} at line {line}, column {column}",
+        offset=offset,
+        line=line,
+        column=column,
+    )
 
 
 @dataclass
@@ -65,7 +103,7 @@ def tokenize(src: str) -> list[_Tok]:
     while i < len(src):
         m = _TOKEN_RE.match(src, i)
         if not m:
-            raise SwirlSyntaxError(f"unexpected character {src[i]!r} at offset {i}")
+            raise _syntax_error(src, f"unexpected character {src[i]!r}", i)
         i = m.end()
         kind = m.lastgroup or ""
         if kind == "ws":
@@ -77,6 +115,7 @@ def tokenize(src: str) -> list[_Tok]:
 
 class _Parser:
     def __init__(self, src: str):
+        self.src = src
         self.toks = tokenize(src)
         self.i = 0
 
@@ -89,19 +128,22 @@ class _Parser:
         self.i += 1
         return t
 
+    def error(self, message: str, pos: int) -> SwirlSyntaxError:
+        return _syntax_error(self.src, message, pos)
+
     def expect(self, text: str) -> _Tok:
         t = self.next()
         if t.text != text:
-            raise SwirlSyntaxError(
-                f"expected {text!r} but found {t.text or 'EOF'!r} at offset {t.pos}"
+            raise self.error(
+                f"expected {text!r} but found {t.text or 'EOF'!r}", t.pos
             )
         return t
 
     def name(self) -> str:
         t = self.next()
         if t.kind != "name":
-            raise SwirlSyntaxError(
-                f"expected identifier but found {t.text or 'EOF'!r} at offset {t.pos}"
+            raise self.error(
+                f"expected identifier but found {t.text or 'EOF'!r}", t.pos
             )
         return t.text
 
@@ -113,7 +155,7 @@ class _Parser:
             configs.append(self.config())
         if self.peek().kind != "eof":
             t = self.peek()
-            raise SwirlSyntaxError(f"trailing input {t.text!r} at offset {t.pos}")
+            raise self.error(f"trailing input {t.text!r}", t.pos)
         return WorkflowSystem(tuple(configs))
 
     def config(self) -> LocationConfig:
@@ -163,11 +205,12 @@ class _Parser:
             return NIL
         if t.text in ("exec", "send", "recv"):
             return self.action()
-        raise SwirlSyntaxError(
-            f"expected a trace term but found {t.text or 'EOF'!r} at offset {t.pos}"
+        raise self.error(
+            f"expected a trace term but found {t.text or 'EOF'!r}", t.pos
         )
 
     def action(self) -> Trace:
+        kw_pos = self.peek().pos
         kw = self.name()
         self.expect("(")
         if kw == "exec":
@@ -205,7 +248,7 @@ class _Parser:
             dst = self.name()
             self.expect(")")
             return Recv(p, src, dst)
-        raise SwirlSyntaxError(f"unknown action {kw!r}")
+        raise self.error(f"unknown action {kw!r}", kw_pos)
 
 
 def parse_system(src: str) -> WorkflowSystem:
@@ -219,7 +262,7 @@ def parse_trace(src: str) -> Trace:
     t = p.par()
     if p.peek().kind != "eof":
         tok = p.peek()
-        raise SwirlSyntaxError(f"trailing input {tok.text!r} at offset {tok.pos}")
+        raise p.error(f"trailing input {tok.text!r}", tok.pos)
     return t
 
 

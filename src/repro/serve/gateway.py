@@ -1,0 +1,348 @@
+"""The HTTP front door — stdlib ``ThreadingHTTPServer`` over the service.
+
+Endpoints (all JSON; auth via the ``X-API-Key`` header, resolved to a
+tenant by the admission controller):
+
+=========================================  =================================
+``POST /v1/workflows``                     submit DAG-JSON / ``.swirl`` →
+                                           ``{fingerprint, cached,
+                                           timings_ms, ...}``
+``GET  /v1/workflows/{fp}``                plan metadata + ``explain()``
+``POST /v1/workflows/{fp}/run``            one instance: ``{"inputs":
+                                           {"loc:datum": v}}`` → ``{data}``
+``POST /v1/workflows/{fp}/run_many``       batch: ``{"inputs": [...]}`` →
+                                           ``{results: [...]}`` through the
+                                           backend's run_many lanes
+``GET  /v1/stats``                         cache / admission / throughput
+``GET  /v1/healthz``                       liveness (no auth)
+=========================================  =================================
+
+Error contract: every failure is a JSON body ``{"error": {...}}`` — never
+a traceback.  ``400`` malformed submission (typed, with line/column for
+``.swirl`` syntax errors), ``401`` unknown API key, ``404`` unknown
+fingerprint, ``429`` quota exhausted (with ``Retry-After``), ``503``
+draining.  HTTP/1.1 with correct ``Content-Length``, so client
+connections stay alive across requests (which is what makes cache-hit
+serving fast enough to benchmark).
+
+The server itself is deliberately boring: one thread per connection
+(``ThreadingHTTPServer``), all real behaviour lives in
+:class:`~repro.serve.service.WorkflowService`.  Shutdown is graceful —
+:meth:`Gateway.close` flips the service into draining mode (new work →
+``503``/``429``), waits for admitted work to finish, then stops the
+accept loop.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any
+
+import numpy as np
+
+from repro.serve.admission import AdmissionRejected, UnknownTenantError
+from repro.serve.service import (
+    ServiceDraining,
+    UnknownWorkflowError,
+    WorkflowService,
+)
+from repro.serve.submission import SubmissionError
+
+__all__ = ["Gateway"]
+
+#: Submissions and payloads beyond this are rejected before reading (413).
+MAX_BODY_BYTES = 64 * 1024 * 1024
+
+_ROUTES = {
+    ("POST", re.compile(r"/v1/workflows\Z")): "submit",
+    ("GET", re.compile(r"/v1/workflows/(?P<fp>[0-9a-f]{64})\Z")): "describe",
+    ("POST", re.compile(r"/v1/workflows/(?P<fp>[0-9a-f]{64})/run\Z")): "run",
+    (
+        "POST",
+        re.compile(r"/v1/workflows/(?P<fp>[0-9a-f]{64})/run_many\Z"),
+    ): "run_many",
+    ("GET", re.compile(r"/v1/stats\Z")): "stats",
+    ("GET", re.compile(r"/v1/healthz\Z")): "healthz",
+}
+
+
+def _jsonable(obj: Any) -> Any:
+    """JSON fallback for payload values (numpy first, then ``str``)."""
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, (set, frozenset)):
+        return sorted(obj)
+    return str(obj)
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server_version = "swirl-gateway/0.1"
+
+    # -- plumbing -------------------------------------------------------------
+    def log_message(self, fmt: str, *args: Any) -> None:
+        pass  # request logging is the embedding application's concern
+
+    @property
+    def gateway(self) -> "Gateway":
+        return self.server.gateway  # type: ignore[attr-defined]
+
+    def _reply(
+        self,
+        status: int,
+        body: dict[str, Any],
+        *,
+        headers: dict[str, str] | None = None,
+    ) -> None:
+        payload = json.dumps(body, default=_jsonable).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(payload)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(payload)
+
+    def _error(
+        self,
+        status: int,
+        error: dict[str, Any],
+        *,
+        headers: dict[str, str] | None = None,
+    ) -> None:
+        self._reply(status, {"error": error}, headers=headers)
+
+    def _read_body(self) -> Any:
+        length = int(self.headers.get("Content-Length") or 0)
+        if length > MAX_BODY_BYTES:
+            raise SubmissionError(
+                f"body of {length} bytes exceeds the {MAX_BODY_BYTES}-byte "
+                "limit",
+                kind="json",
+            )
+        raw = self.rfile.read(length) if length else b""
+        ctype = (self.headers.get("Content-Type") or "").split(";")[0].strip()
+        if ctype in ("text/plain", "application/x-swirl"):
+            return raw.decode("utf-8", errors="replace")
+        if not raw:
+            return None
+        try:
+            return json.loads(raw)
+        except json.JSONDecodeError as e:
+            raise SubmissionError(
+                f"request body is not valid JSON: {e}",
+                kind="json",
+                line=e.lineno,
+                column=e.colno,
+            ) from e
+
+    # -- dispatch -------------------------------------------------------------
+    def do_GET(self) -> None:  # noqa: N802 (http.server naming)
+        self._dispatch("GET")
+
+    def do_POST(self) -> None:  # noqa: N802
+        self._dispatch("POST")
+
+    def _dispatch(self, method: str) -> None:
+        path = self.path.split("?", 1)[0]
+        for (m, pattern), name in _ROUTES.items():
+            if m != method:
+                continue
+            match = pattern.match(path)
+            if match:
+                self._handle(name, match.groupdict())
+                return
+        self._error(
+            404,
+            {
+                "type": "NotFound",
+                "message": f"no route {method} {path}",
+                "routes": sorted(
+                    f"{m} {p.pattern}" for (m, p) in _ROUTES
+                ),
+            },
+        )
+
+    def _handle(self, name: str, params: dict[str, str]) -> None:
+        service = self.gateway.service
+        if name == "healthz":
+            self._reply(
+                200,
+                {
+                    "status": (
+                        "draining" if service.admission.draining else "ok"
+                    )
+                },
+            )
+            return
+        try:
+            tenant = service.admission.authenticate(
+                self.headers.get("X-API-Key", "")
+            )
+        except UnknownTenantError:
+            self._error(
+                401,
+                {
+                    "type": "Unauthorized",
+                    "message": "unknown API key (set the X-API-Key header)",
+                },
+            )
+            return
+        try:
+            if name == "submit":
+                self._reply(200, service.submit(self._read_body()))
+            elif name == "describe":
+                self._reply(200, service.describe(params["fp"]))
+            elif name == "run":
+                body = self._read_body() or {}
+                if not isinstance(body, dict):
+                    raise SubmissionError(
+                        "run body must be a JSON object", kind="inputs"
+                    )
+                self._reply(
+                    200,
+                    service.run(
+                        params["fp"], body.get("inputs"), tenant=tenant
+                    ),
+                )
+            elif name == "run_many":
+                body = self._read_body() or {}
+                if not isinstance(body, dict) or "inputs" not in body:
+                    raise SubmissionError(
+                        "run_many body must be a JSON object with 'inputs' "
+                        "(a list, one entry per instance)",
+                        kind="inputs",
+                    )
+                self._reply(
+                    200,
+                    service.run_many(
+                        params["fp"],
+                        body["inputs"],
+                        tenant=tenant,
+                        max_concurrent=body.get("max_concurrent"),
+                    ),
+                )
+            elif name == "stats":
+                self._reply(200, service.stats())
+        except SubmissionError as e:
+            self._error(400, e.to_json())
+        except UnknownWorkflowError as e:
+            self._error(
+                404,
+                {
+                    "type": "UnknownWorkflow",
+                    "message": (
+                        f"no cached workflow {e.fingerprint!r}; submit it "
+                        "first (POST /v1/workflows)"
+                    ),
+                },
+            )
+        except AdmissionRejected as e:
+            if e.reason == "draining":
+                self._error(
+                    503,
+                    {"type": "Draining", "message": str(e)},
+                    headers={"Retry-After": str(e.retry_after)},
+                )
+            else:
+                service.record_rejection()
+                self._error(
+                    429,
+                    {
+                        "type": "AdmissionRejected",
+                        "message": str(e),
+                        "tenant": e.tenant,
+                        "reason": e.reason,
+                        "retry_after": e.retry_after,
+                    },
+                    headers={"Retry-After": str(e.retry_after)},
+                )
+        except ServiceDraining as e:
+            self._error(
+                503,
+                {"type": "Draining", "message": str(e)},
+                headers={"Retry-After": "1"},
+            )
+        except BrokenPipeError:
+            raise  # client went away mid-reply; nothing to report to it
+        except Exception as e:  # noqa: BLE001 — the no-traceback contract
+            self._error(
+                500,
+                {"type": type(e).__name__, "message": str(e)},
+            )
+
+
+class Gateway:
+    """Own one HTTP server around a :class:`WorkflowService`.
+
+    ``port=0`` (the default) binds an ephemeral port — read
+    :attr:`Gateway.url` after construction.  Use as a context manager or
+    call :meth:`start` / :meth:`close` explicitly; :meth:`close` drains
+    admitted work before stopping the accept loop, so in-flight
+    executions are never dropped.
+    """
+
+    def __init__(
+        self,
+        service: WorkflowService,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+    ):
+        self.service = service
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self._httpd.gateway = self  # type: ignore[attr-defined]
+        self._thread: threading.Thread | None = None
+
+    # -- addresses ------------------------------------------------------------
+    @property
+    def address(self) -> tuple[str, int]:
+        host, port = self._httpd.server_address[:2]
+        return str(host), int(port)
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}"
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "Gateway":
+        """Serve on a daemon thread; returns immediately."""
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._httpd.serve_forever,
+                name="swirl-gateway",
+                daemon=True,
+            )
+            self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Serve on the calling thread (blocks until :meth:`close`)."""
+        self._httpd.serve_forever()
+
+    def close(self, *, drain_timeout_s: float = 30.0) -> bool:
+        """Graceful shutdown: drain admitted work, then stop accepting.
+
+        Returns ``True`` when every admitted run finished inside the
+        timeout (the in-flight guarantee the overload benchmark asserts).
+        """
+        drained = self.service.drain(timeout_s=drain_timeout_s)
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(5)
+            self._thread = None
+        return drained
+
+    def __enter__(self) -> "Gateway":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

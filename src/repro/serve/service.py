@@ -1,0 +1,323 @@
+"""The backend-agnostic service core behind the HTTP gateway.
+
+:class:`WorkflowService` owns the four serving concerns and exposes them as
+plain methods the gateway (or tests, or an embedding application) calls:
+
+* **submit** — decode a DAG-JSON / ``.swirl`` body
+  (:mod:`repro.serve.submission`), compile it through the staged pipeline
+  ``trace → optimize → [schedule] → lower → compile`` against the
+  service's step registry (the schedule stage runs when the operator
+  deploys with a ``network`` cost model — submissions then get
+  auto-placement instead of their author's static mapping), and store
+  the artifact in the content-addressed cache
+  (:mod:`repro.serve.cache`).  Returns the plan fingerprint — the handle
+  every later request uses.
+* **run / run_many** — execute instances against a cached artifact under
+  admission control (:mod:`repro.serve.admission`).  On backends that
+  advertise concurrent batches (``threaded``, the default) many requests
+  share one compiled Executable; batches stream through the backend's
+  persistent ``run_many`` lanes.
+* **describe / stats** — :meth:`Plan.explain` output for one fingerprint;
+  cache + derive-cache + admission + throughput counters for operators.
+
+Step bodies cannot travel over HTTP: the operator deploys the service with
+a **step registry** (name → callable / :class:`StepMeta`), and submissions
+may only reference registered steps — an unknown step is a 400-class
+:class:`SubmissionError`, caught at submit time, never at run time.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+import time
+from typing import Any, Mapping, Sequence
+
+from repro import api
+from repro.core.compile import StepFn, StepMeta
+from repro.serve.admission import (
+    AdmissionController,
+    TenantConfig,
+)
+from repro.serve.cache import CacheEntry, PlanCache
+from repro.serve.submission import (
+    SubmissionError,
+    compile_submission,
+    parse_payload_keys,
+)
+
+__all__ = ["ServiceDraining", "WorkflowService", "UnknownWorkflowError"]
+
+#: The open single-tenant default: embedding apps and quickstarts that do
+#: not care about multi-tenancy authenticate with an empty API key.
+DEFAULT_TENANTS = (
+    TenantConfig("anonymous", api_key="", max_concurrent=32, max_queue=128),
+)
+
+
+class UnknownWorkflowError(KeyError):
+    """No cached workflow under the requested fingerprint (HTTP 404)."""
+
+    def __init__(self, fingerprint: str):
+        super().__init__(fingerprint)
+        self.fingerprint = fingerprint
+
+
+class ServiceDraining(RuntimeError):
+    """The service is shutting down and admits no new work (HTTP 503)."""
+
+
+def _source_digest(body: Any) -> str:
+    """Canonical digest of a submission body (dict key order insensitive)."""
+    canon = json.dumps(
+        body, sort_keys=True, separators=(",", ":"), default=repr
+    )
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+class WorkflowService:
+    """Compile-once/run-many workflow serving (see module docstring).
+
+    ``steps`` is the server-side step registry; ``backend`` defaults to
+    ``threaded`` (the one backend whose compiled programs serve concurrent
+    batches); ``network`` (a :class:`repro.sched.NetworkModel`) enables the
+    optional schedule stage — every compiled submission is auto-placed
+    against the cost model via :meth:`Plan.schedule` before lowering;
+    ``lower_options`` are passed to :meth:`Plan.lower` verbatim
+    (e.g. ``{"timeout_s": 30}``).  ``batch_max_concurrent`` caps the
+    *internal* parallelism of any one ``run_many`` batch, independently of
+    the per-tenant admission quota (which counts whole requests).
+    """
+
+    def __init__(
+        self,
+        steps: Mapping[str, StepFn | StepMeta],
+        *,
+        backend: str = "threaded",
+        rules: Sequence[str] = ("R1R2",),
+        network: Any | None = None,
+        tenants: Sequence[TenantConfig] | None = None,
+        cache_capacity: int = 128,
+        batch_max_concurrent: int = 8,
+        admission_timeout_s: float = 120.0,
+        lower_options: Mapping[str, Any] | None = None,
+    ):
+        self.steps = dict(steps)
+        self.backend = backend
+        self.default_rules = tuple(rules)
+        self.network = network
+        self.cache = PlanCache(cache_capacity)
+        self.admission = AdmissionController(
+            tuple(tenants) if tenants is not None else DEFAULT_TENANTS
+        )
+        self.batch_max_concurrent = batch_max_concurrent
+        self.admission_timeout_s = admission_timeout_s
+        self.lower_options = dict(lower_options or {})
+        self.started_unix = time.time()
+        self._counters_lock = threading.Lock()
+        self._counters = {
+            "submissions": 0,
+            "compiles": 0,
+            "runs": 0,
+            "batches": 0,
+            "instances_completed": 0,
+            "instances_failed": 0,
+            "rejected": 0,
+        }
+
+    def _count(self, **deltas: int) -> None:
+        with self._counters_lock:
+            for key, d in deltas.items():
+                self._counters[key] += d
+
+    # -- submit ---------------------------------------------------------------
+    def submit(self, body: Any) -> dict[str, Any]:
+        """Compile one submission (or hit the cache) → receipt with fingerprint.
+
+        The receipt carries ``cached`` (no compile happened), the plan's
+        compile ``timings`` (from :attr:`Plan.timings`, milliseconds) and
+        enough metadata for the client to build run payloads.
+        """
+        self._count(submissions=1)
+        if self.admission.draining:
+            raise ServiceDraining("service is draining; not accepting work")
+        digest = _source_digest(body)
+        entry = self.cache.lookup_source(digest)
+        if entry is not None:
+            return self._receipt(entry, cached=True)
+        t0 = time.perf_counter()
+        if isinstance(body, Mapping) and "rules" not in body:
+            body = dict(body, rules=list(self.default_rules))
+        plan, meta = compile_submission(body)
+        missing = sorted(set(plan.steps()) - set(self.steps))
+        if missing:
+            raise SubmissionError(
+                f"workflow references steps with no registered body: "
+                f"{missing}; registered: {sorted(self.steps)}",
+                kind="steps",
+            )
+        if self.network is not None:
+            # Operator-configured auto-placement: re-map steps against the
+            # deployment's cost model, then fingerprint the *scheduled*
+            # plan so placement-equivalent submissions share one artifact.
+            plan = plan.schedule(self.network, steps=self.steps)
+        fingerprint = plan.fingerprint()
+        existing = self.cache.peek(fingerprint)
+        if existing is not None:
+            # Same artifact reached from different source text: alias the
+            # digest onto it, skip the lower/compile.
+            entry = self.cache.put(existing, source_digest=digest)
+            return self._receipt(entry, cached=True)
+        executable = (
+            plan.lower(self.backend, **self.lower_options).compile(self.steps)
+        )
+        entry = CacheEntry(
+            fingerprint=fingerprint,
+            plan=plan,
+            executable=executable,
+            meta=meta,
+            compile_seconds=time.perf_counter() - t0,
+        )
+        entry = self.cache.put(entry, source_digest=digest)
+        self._count(compiles=1)
+        return self._receipt(entry, cached=False)
+
+    def _receipt(self, entry: CacheEntry, *, cached: bool) -> dict[str, Any]:
+        return {
+            **entry.summary(),
+            "cached": cached,
+            "backend": self.backend,
+            "timings_ms": {
+                label: round(seconds * 1e3, 3)
+                for label, seconds in entry.plan.timings
+            },
+        }
+
+    # -- execute --------------------------------------------------------------
+    def _entry(self, fingerprint: str) -> CacheEntry:
+        entry = self.cache.get(fingerprint)
+        if entry is None:
+            raise UnknownWorkflowError(fingerprint)
+        return entry
+
+    def _admitted(self, tenant: TenantConfig | str | None):
+        name = tenant.name if isinstance(tenant, TenantConfig) else tenant
+        if name is None:
+            name = self.admission.tenant_names()[0]
+        return self.admission.admit(name, timeout_s=self.admission_timeout_s)
+
+    def run(
+        self,
+        fingerprint: str,
+        inputs: Any = None,
+        *,
+        tenant: TenantConfig | str | None = None,
+    ) -> dict[str, Any]:
+        """Execute one instance of a cached workflow; returns its data."""
+        entry = self._entry(fingerprint)
+        payloads = parse_payload_keys(
+            inputs, entry.plan.system.locations()
+        )
+        self._count(runs=1)
+        with self._admitted(tenant):
+            try:
+                result = self._run_guarded(
+                    entry, lambda exe: exe.run(initial_payloads=payloads)
+                )
+            except Exception:
+                self._count(instances_failed=1)
+                raise
+        self._count(instances_completed=1)
+        return {"fingerprint": fingerprint, "data": result.data}
+
+    def run_many(
+        self,
+        fingerprint: str,
+        inputs: Sequence[Any],
+        *,
+        tenant: TenantConfig | str | None = None,
+        max_concurrent: int | None = None,
+    ) -> dict[str, Any]:
+        """Execute a batch through the backend's persistent run_many lanes.
+
+        One admission slot covers the whole batch (a tenant cannot inflate
+        its quota by batching); internal parallelism is capped by the
+        service's ``batch_max_concurrent``.
+        """
+        entry = self._entry(fingerprint)
+        if not isinstance(inputs, Sequence) or isinstance(inputs, (str, bytes)):
+            raise SubmissionError(
+                "'inputs' must be a list (one object per instance)",
+                kind="inputs",
+            )
+        locations = entry.plan.system.locations()
+        payloads = [parse_payload_keys(item, locations) for item in inputs]
+        lanes = min(
+            self.batch_max_concurrent,
+            max_concurrent or self.batch_max_concurrent,
+        )
+        self._count(batches=1)
+        with self._admitted(tenant):
+            try:
+                results = self._run_guarded(
+                    entry,
+                    lambda exe: exe.run_many(payloads, max_concurrent=lanes),
+                )
+            except Exception:
+                self._count(instances_failed=len(payloads))
+                raise
+        self._count(instances_completed=len(results))
+        return {
+            "fingerprint": fingerprint,
+            "results": [{"data": r.data} for r in results],
+        }
+
+    def _run_guarded(self, entry: CacheEntry, op):
+        """Run ``op(executable)``, serialising when the backend needs it.
+
+        Backends advertising concurrent batches take no lock — that is the
+        cache-hit hot path.  The others (``inprocess``/``multiprocess``/
+        ``jax``) are serialised per entry so a burst of requests queues
+        instead of tripping :class:`repro.api.ConcurrentRunError`.
+        """
+        exe = entry.executable
+        if exe.concurrent_runs:
+            return op(exe)
+        with entry.run_lock:
+            return op(exe)
+
+    # -- introspection ---------------------------------------------------------
+    def describe(self, fingerprint: str) -> dict[str, Any]:
+        entry = self.cache.peek(fingerprint)
+        if entry is None:
+            raise UnknownWorkflowError(fingerprint)
+        return {
+            **entry.summary(),
+            "backend": self.backend,
+            "placement": {
+                s: list(ls) for s, ls in entry.plan.placement().items()
+            },
+            "explain": entry.plan.explain(),
+        }
+
+    def stats(self) -> dict[str, Any]:
+        with self._counters_lock:
+            counters = dict(self._counters)
+        return {
+            "uptime_s": round(time.time() - self.started_unix, 3),
+            "backend": self.backend,
+            "counters": counters,
+            "cache": self.cache.stats(),
+            "derive_cache": api.compile_cache_stats(),
+            "admission": self.admission.stats(),
+        }
+
+    def record_rejection(self) -> None:
+        """Gateway hook: count a 429 in the service-level counters."""
+        self._count(rejected=1)
+
+    # -- shutdown --------------------------------------------------------------
+    def drain(self, *, timeout_s: float = 30.0) -> bool:
+        """Graceful shutdown: reject new work, wait for admitted work."""
+        return self.admission.drain(timeout_s=timeout_s)

@@ -22,6 +22,8 @@ from .api import (  # noqa: F401
     ExecutionResult,
     Lowered,
     Plan,
+    clear_compile_cache,
+    compile_cache_stats,
     trace,
 )
 from .backends import (  # noqa: F401
@@ -46,6 +48,8 @@ __all__ = [
     "AppliedRewrite",
     "BisimCertificate",
     "ConcurrentRunError",
+    "clear_compile_cache",
+    "compile_cache_stats",
     "register_backend",
     "get_backend",
     "available_backends",

@@ -390,20 +390,31 @@ class SocketTransport(Transport):
                 duplicate = seq <= self._delivered.get(endpoint, 0)
                 if not duplicate:
                     self._delivered[endpoint] = seq
+                # Ack BEFORE the message becomes consumable: once it is in
+                # the inbox the receiving worker may finish its program and
+                # close this transport, and an ack queued after that close
+                # is lost — the sender then dies awaiting it.  Socket
+                # buffers survive close, so an ack already on the wire is
+                # always readable by the sender.
+                if (
+                    self.drop_ack_prob
+                    and self._rng(self._ack_rngs, endpoint, salt=1).random()
+                    < self.drop_ack_prob
+                ):
+                    self._bump("acks_dropped")
+                    acked = True  # simulated loss: keep serving
+                else:
+                    try:
+                        conn.send(("ack", endpoint, seq))
+                        acked = True
+                    except (EOFError, OSError, BrokenPipeError):
+                        acked = False  # sender gone; deliver, then stop
+                if not duplicate:
                     # Deliver under the lock so two connections carrying the
                     # same endpoint cannot reorder fresh sequence numbers.
                     self._inbox(endpoint).put(Message(name, payload, seq))
             self._bump("duplicates" if duplicate else "delivered")
-            if (
-                self.drop_ack_prob
-                and self._rng(self._ack_rngs, endpoint, salt=1).random()
-                < self.drop_ack_prob
-            ):
-                self._bump("acks_dropped")
-                continue
-            try:
-                conn.send(("ack", endpoint, seq))
-            except (EOFError, OSError, BrokenPipeError):
+            if not acked:
                 break
 
     def recv(

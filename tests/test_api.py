@@ -260,7 +260,7 @@ class TestConcurrentRun:
         with pytest.raises(Exception, match="failed"):
             exe.run()
         exe2 = plan.lower("inprocess").compile(quickstart_steps())
-        assert not exe._running
+        assert exe.active_runs == 0
         assert exe2.run().payload("cpu0", "d^evaluate") == 54
 
     def test_distinct_executables_may_overlap(self, plan):
@@ -432,3 +432,82 @@ class TestDeprecationShims:
             rt = ThreadedRuntime(bundles)
         data = rt.run()
         assert data["cpu0"]["d^evaluate"] == 54
+
+
+# ---------------------------------------------------------------------------
+# Plan.fingerprint — the content address of a compiled plan
+# ---------------------------------------------------------------------------
+
+
+class TestFingerprint:
+    def test_shape(self, plan):
+        fp = plan.fingerprint()
+        assert isinstance(fp, str) and len(fp) == 64
+        int(fp, 16)  # hex digest
+
+    def test_equal_plans_equal_fingerprints(self):
+        """Two independently built but equal plans share a fingerprint —
+        the contract the serving cache's content addressing relies on."""
+        a = swirl.trace(EDGES, mapping=MAPPING).optimize()
+        b = swirl.trace(
+            dict(EDGES), mapping={s: tuple(ls) for s, ls in MAPPING.items()}
+        ).optimize()
+        assert a is not b
+        assert a.fingerprint() == b.fingerprint()
+
+    def test_stable_across_calls(self, plan):
+        assert plan.fingerprint() == plan.fingerprint()
+
+    def test_rules_change_fingerprint(self):
+        traced = swirl.trace(EDGES, mapping=MAPPING)
+        assert (
+            traced.fingerprint()
+            != traced.optimize().fingerprint()
+        )
+
+    def test_placement_change_fingerprint(self):
+        moved = dict(MAPPING, evaluate=("gpu1",))
+        a = swirl.trace(EDGES, mapping=MAPPING).optimize()
+        b = swirl.trace(EDGES, mapping=moved).optimize()
+        assert a.fingerprint() != b.fingerprint()
+
+    def test_workflow_change_fingerprint(self):
+        edges = dict(EDGES, report=["report2"], report2=[])
+        mapping = dict(MAPPING, report2=("cpu0",))
+        a = swirl.trace(EDGES, mapping=MAPPING).optimize()
+        b = swirl.trace(edges, mapping=mapping).optimize()
+        assert a.fingerprint() != b.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# Compile-cache coherence — clear_compile_cache vs live plans
+# ---------------------------------------------------------------------------
+
+
+class TestCompileCacheCoherence:
+    def test_clear_invalidates_live_plan_exec_program(self, plan):
+        """Regression: clear_compile_cache() used to leave already-derived
+        ``Plan.exec_program()`` memos live, so a 'cleared' process kept
+        serving stale lowered programs."""
+        before = plan.exec_program()
+        assert plan.exec_program() is before  # memoised
+        swirl.clear_compile_cache()
+        after = plan.exec_program()
+        assert after is not before
+        assert after.system == before.system  # same content, fresh derive
+        assert plan.exec_program() is after  # re-memoised
+
+    def test_stats_counters(self, plan):
+        swirl.clear_compile_cache()
+        base = swirl.compile_cache_stats()
+        plan.schedule()  # derives via the module-level cache
+        s1 = swirl.compile_cache_stats()
+        assert s1["misses"] == base["misses"] + 1
+        plan.schedule()
+        s2 = swirl.compile_cache_stats()
+        assert s2["hits"] >= s1["hits"]
+        assert s2["entries"] >= 1
+        swirl.clear_compile_cache()
+        s3 = swirl.compile_cache_stats()
+        assert s3["entries"] == 0
+        assert s3["clears"] == s2["clears"] + 1

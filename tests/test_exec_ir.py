@@ -10,8 +10,11 @@ Covers the tentpole contracts of the program-IR refactor:
   smart-constructor identities;
 * ``Cursor`` implements the active-occurrence semantics incrementally;
 * ``Executable.run_many`` amortises one lowered program over a batch with
-  correct results in input order, and its re-entry guard composes: whole
-  batches are mutually exclusive, internal instance parallelism is not.
+  correct results in input order, and the re-entry guard follows the
+  backend's ``concurrent_batches()`` capability: the threaded backend
+  serves overlapping batches from one Executable (each isolated by
+  batch-unique endpoint tags), the others stay mutually exclusive — as
+  does threaded itself when the caller shares a transport across runs.
 """
 
 from __future__ import annotations
@@ -351,8 +354,7 @@ class TestRunMany:
 
 
 class TestRunManyGuard:
-    def _slow_batch_exe(self, started, release):
-        plan = quickstart_plan()
+    def _slow_exe(self, started, release, lowered):
         steps = dict(quickstart_steps())
 
         def slow_preprocess(inp):
@@ -361,11 +363,15 @@ class TestRunManyGuard:
             return {"d^preprocess": list(range(10))}
 
         steps["preprocess"] = slow_preprocess
-        return plan.lower("threaded").compile(steps)
+        return lowered.compile(steps)
 
-    def test_concurrent_batches_rejected(self):
+    def test_threaded_serves_concurrent_batches(self):
+        """One threaded Executable overlaps whole batches (the serving
+        hot path): results stay isolated and the guard never trips."""
         started, release = threading.Event(), threading.Event()
-        exe = self._slow_batch_exe(started, release)
+        plan = quickstart_plan()
+        exe = self._slow_exe(started, release, plan.lower("threaded"))
+        assert exe.concurrent_runs
         results = {}
 
         def batch():
@@ -375,18 +381,111 @@ class TestRunManyGuard:
         t.start()
         assert started.wait(10)
         try:
-            with pytest.raises(ConcurrentRunError):
-                exe.run_many([None])
-            with pytest.raises(ConcurrentRunError):
-                exe.run()
+            assert exe.active_runs == 1
+            # Overlapping work on the SAME executable is now served, not
+            # rejected: a second batch and a single run both complete
+            # while the first batch is still blocked in its step.
+            release.set()
+            overlap_batch = exe.run_many([None])
+            overlap_run = exe.run()
         finally:
             release.set()
             t.join(30)
         assert len(results["batch"]) == 2
         for r in results["batch"]:
             assert r.payload("cpu0", "d^evaluate") == 54
-        # After the batch drains, the guard is free again.
-        assert exe.run_many([None])[0].payload("cpu0", "d^evaluate") == 54
+        assert overlap_batch[0].payload("cpu0", "d^evaluate") == 54
+        assert overlap_run.payload("cpu0", "d^evaluate") == 54
+        assert exe.active_runs == 0
+
+    def test_threaded_overlap_results_isolated(self):
+        """Truly simultaneous batches on one Executable never cross
+        wires: each batch sees exactly its own per-instance inputs."""
+        inst, fns = _seeded_instance()
+        exe = swirl.trace(inst).optimize().lower("threaded").compile(fns)
+        n_batches, per_batch = 4, 5
+        out: dict[int, list] = {}
+        errors: list[Exception] = []
+        gate = threading.Barrier(n_batches)
+
+        def batch(b):
+            inputs = [
+                {("l0", "d_seed"): f"b{b}i{i}"} for i in range(per_batch)
+            ]
+            gate.wait()
+            try:
+                out[b] = exe.run_many(inputs, max_concurrent=per_batch)
+            except Exception as e:  # surface in the main thread
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=batch, args=(b,))
+            for b in range(n_batches)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not errors
+        for b in range(n_batches):
+            got = [r.payload("l1", "d_ingest") for r in out[b]]
+            assert got == [
+                f"ingest(d_seed=b{b}i{i})" for i in range(per_batch)
+            ]
+
+    def test_exclusive_backend_rejects_overlap(self):
+        """Backends without the concurrent-batches capability keep the
+        old mutual-exclusion contract."""
+        started, release = threading.Event(), threading.Event()
+        plan = quickstart_plan()
+        exe = self._slow_exe(started, release, plan.lower("inprocess"))
+        assert not exe.concurrent_runs
+        results = {}
+
+        def run():
+            results["run"] = exe.run()
+
+        t = threading.Thread(target=run, daemon=True)
+        t.start()
+        assert started.wait(10)
+        try:
+            with pytest.raises(ConcurrentRunError):
+                exe.run()
+            with pytest.raises(ConcurrentRunError):
+                exe.run_many([None])
+        finally:
+            release.set()
+            t.join(30)
+        assert results["run"].payload("cpu0", "d^evaluate") == 54
+        # After the run drains, the guard is free again.
+        assert exe.run().payload("cpu0", "d^evaluate") == 54
+
+    def test_shared_transport_disables_concurrency(self):
+        """A caller-shared transport/registry makes untagged endpoints
+        collide across runs, so the capability switches off."""
+        from repro.workflow.channels import ChannelRegistry
+
+        started, release = threading.Event(), threading.Event()
+        plan = quickstart_plan()
+        exe = self._slow_exe(
+            started,
+            release,
+            plan.lower("threaded", channels=ChannelRegistry()),
+        )
+        assert not exe.concurrent_runs
+
+        def run():
+            exe.run()
+
+        t = threading.Thread(target=run, daemon=True)
+        t.start()
+        assert started.wait(10)
+        try:
+            with pytest.raises(ConcurrentRunError):
+                exe.run()
+        finally:
+            release.set()
+            t.join(30)
 
     def test_internal_parallelism_not_rejected(self):
         """max_concurrent > 1 must not trip the re-entry guard."""

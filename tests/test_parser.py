@@ -66,13 +66,49 @@ def test_syntax_errors(bad):
         loads(bad)
 
 
-def test_error_reports_offset():
+def test_error_reports_position():
+    """Syntax errors carry structured 1-based line/column (and the raw
+    offset) — the serving gateway forwards them in its 400 JSON bodies."""
     try:
         loads("<l,{},exec(s,{}->{},{l})> | <l2,{},bogus>")
     except SwirlSyntaxError as e:
-        assert "offset" in str(e)
+        assert "line 1" in str(e) and "column" in str(e)
+        assert e.line == 1
+        assert e.column is not None and e.column > 28  # past the 2nd <
+        assert e.offset == e.column - 1  # single-line source
     else:
         raise AssertionError("expected syntax error")
+
+
+def test_error_position_is_multiline_aware():
+    src = "# header comment\n<l, {d1},\n  bogus(s)>\n"
+    try:
+        loads(src)
+    except SwirlSyntaxError as e:
+        assert e.line == 3
+        assert e.column == 3  # 'bogus' after two spaces
+        lines = src.splitlines()
+        assert lines[e.line - 1][e.column - 1 :].startswith("bogus")
+    else:
+        raise AssertionError("expected syntax error")
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "<l,{},exec(s,{}->{},{l})",
+        "<l,{},exec(s,{}{},{l})>",
+        "<l,{},bogus(s)>",
+        "<l,{d d},0>",
+    ],
+)
+def test_all_errors_carry_positions(bad):
+    with pytest.raises(SwirlSyntaxError) as exc:
+        loads(bad)
+    e = exc.value
+    assert e.line is not None and e.line >= 1
+    assert e.column is not None and e.column >= 1
+    assert e.offset is not None and 0 <= e.offset <= len(bad)
 
 
 def test_comments_and_whitespace():
