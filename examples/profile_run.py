@@ -1,0 +1,83 @@
+"""Observability: trace a scheduled run, diff it against the simulator.
+
+Lowers the 1000 Genomes workflow with ``trace=True``, so the threaded
+backend records an exec/send/recv span for everything it does.  The
+resulting :class:`repro.obs.RunProfile` rides on the execution result:
+
+* ``Plan.profile(result)`` aligns the recorded spans against the sched
+  simulator's predicted timeline — per-step start drift, duration ratio,
+  and achieved-vs-predicted cross-location bytes;
+* ``CostModel.from_profile`` calibrates the simulator with the measured
+  step durations, closing the predict → run → re-predict loop;
+* ``profile.save_chrome_trace`` writes Chrome trace-event JSON — open it
+  at https://ui.perfetto.dev (or ``chrome://tracing``) for a per-location
+  timeline with send→recv flow arrows.
+
+Run: ``PYTHONPATH=src python examples/profile_run.py``
+"""
+
+import json
+
+import numpy as np
+
+from repro import swirl
+from repro.core.translate import genomes_1000
+from repro.obs import validate_chrome_trace
+from repro.sched import CostModel, NetworkModel
+
+inst = genomes_1000(n=4, m=4, a=2, b=2, c=2)
+rng = np.random.default_rng(0)
+init = {("l^d", d): rng.random(4096) for d in inst.g("l^d")}
+
+
+def make_fns():
+    fns = {}
+    for s in inst.workflow.steps:
+        outs = inst.out_data(s)
+        if s == "s0":
+            fns[s] = lambda i, outs=outs: {o: init[("l^d", o)] for o in outs}
+        else:
+            fns[s] = lambda i, outs=outs: {
+                o: float(sum(np.sum(np.atleast_1d(v)) for v in i.values()))
+                for o in outs
+            }
+    return fns
+
+
+# 1. Schedule against a two-rack cost model, then lower with trace=True.
+network = NetworkModel.preset("two-rack")
+plan = swirl.trace(inst).optimize().schedule(network)
+exe = plan.lower("threaded", trace=True, timeout_s=60).compile(make_fns())
+result = exe.run(initial_payloads=dict(init))
+
+# 2. The profile is attached to the result: spans + pipeline phases.
+profile = result.profile
+print(profile.summary())
+print()
+
+# 3. Predicted vs actual: align the spans against the simulator.
+report = plan.profile(result, network=network)
+print(report.summary())
+print()
+
+# 4. Calibrate the cost model from the measured run and re-predict.
+calibrated = CostModel.from_profile(profile)
+recal = plan.profile(result, network=network, costs=calibrated)
+print(
+    f"makespan predicted with default costs:    "
+    f"{report.predicted_makespan * 1e3:8.2f} ms"
+)
+print(
+    f"makespan predicted with measured costs:   "
+    f"{recal.predicted_makespan * 1e3:8.2f} ms"
+)
+print(f"makespan actually measured:               "
+      f"{report.actual_makespan * 1e3:8.2f} ms")
+
+# 5. Export a Perfetto-loadable Chrome trace and check it validates.
+path = "genomes_trace.json"
+profile.save_chrome_trace(path)
+with open(path) as f:
+    validate_chrome_trace(json.load(f))
+print(f"\nwrote {path} ({len(profile.spans)} spans) — "
+      "open at https://ui.perfetto.dev")

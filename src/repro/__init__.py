@@ -21,6 +21,7 @@ _SUBMODULES = (
     "backends",
     "core",
     "exec",
+    "obs",
     "sched",
     "serve",
     "swirl",

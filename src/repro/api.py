@@ -477,9 +477,26 @@ class Plan:
         cached = self.__dict__.get("_exec_program")
         if cached is not None and cached[0] == _CACHE_GENERATION:
             return cached[1]
+        t0 = time.perf_counter()
         program = lower_system(self.system, schedule=self.schedule_report)
+        self._record_phase("lower", time.perf_counter() - t0)
         self.__dict__["_exec_program"] = (_CACHE_GENERATION, program)
         return program
+
+    def _record_phase(self, label: str, seconds: float) -> None:
+        """Memoised side-channel for post-construction phase timings.
+
+        ``timings`` is frozen at derive time; the lower/compile stages run
+        later (and at most once each, thanks to memoisation), so they land
+        in a mutable memo rendered by :meth:`explain` and
+        :meth:`phase_timings` alongside the frozen entries.
+        """
+        self.__dict__.setdefault("_phase_timings", {})[label] = seconds
+
+    def phase_timings(self) -> tuple[tuple[str, float], ...]:
+        """Every recorded pipeline phase: derive-time + lower/compile."""
+        extra = self.__dict__.get("_phase_timings") or {}
+        return self.timings + tuple(extra.items())
 
     # -- scheduling ---------------------------------------------------------
     def schedule(
@@ -635,6 +652,43 @@ class Plan:
         return _derive_plan(inst, tuple(r.rule for r in self.rewrites))
 
     # -- introspection ------------------------------------------------------
+    def profile(
+        self,
+        result: Any,
+        *,
+        network: NetworkModel | None = None,
+        sizes: SizeModel | None = None,
+        costs: CostModel | None = None,
+        exec_slots: int | None = None,
+    ) -> "Any":
+        """Align a traced run against this plan's predicted timeline.
+
+        ``result`` is a traced :class:`~repro.backends.base.ExecutionResult`
+        (from an Executable lowered with ``trace=True``) or a bare
+        :class:`repro.obs.RunProfile`.  Replays the plan through the sched
+        simulator under the given models (defaults match
+        :func:`repro.sched.simulate`) and returns a
+        :class:`repro.obs.ProfileReport` with per-step predicted-vs-actual
+        drift and achieved-vs-predicted cross-location bytes.
+        """
+        from repro.obs.profile import RunProfile, align
+
+        prof = getattr(result, "profile", result)
+        if not isinstance(prof, RunProfile):
+            raise ValueError(
+                "result carries no RunProfile — run it on an Executable "
+                'lowered with trace=True (e.g. plan.lower("threaded", '
+                "trace=True))"
+            )
+        return align(
+            self,
+            prof,
+            network=network,
+            sizes=sizes,
+            costs=costs,
+            exec_slots=exec_slots,
+        )
+
     def explain(self) -> str:
         """Human-readable report: trace, rewrites applied, placement."""
         lines = ["== SWIRL plan =="]
@@ -670,9 +724,10 @@ class Plan:
                 lines.append(f"  {row}")
         lines.append("")
         lines.append("-- timings --")
-        if not self.timings:
+        timings = self.phase_timings()
+        if not timings:
             lines.append("  (none recorded — plan built from raw syntax)")
-        for label, seconds in self.timings:
+        for label, seconds in timings:
             lines.append(f"  {label:<24} {seconds * 1e3:9.2f} ms")
         lines.append("")
         lines.append("-- per-location traces --")
@@ -719,8 +774,11 @@ class Lowered:
                 spec if isinstance(spec, StepMeta) else StepMeta(fn=spec)
             )
         backend = get_backend(self.backend_name)
-        program = backend.compile(
-            self.plan.exec_program(), metas, self.options
+        exec_program = self.plan.exec_program()  # memoised; times "lower"
+        t0 = time.perf_counter()
+        program = backend.compile(exec_program, metas, self.options)
+        self.plan._record_phase(
+            f"compile[{self.backend_name}]", time.perf_counter() - t0
         )
         return Executable(
             plan=self.plan,
@@ -799,9 +857,17 @@ class Executable:
     ) -> ExecutionResult:
         self._enter_run("run")
         try:
-            return self.program.run(initial_payloads)
+            return self._with_phases(self.program.run(initial_payloads))
         finally:
             self._exit_run()
+
+    def _with_phases(self, result: ExecutionResult) -> ExecutionResult:
+        """Stamp a traced result's profile with the plan's phase timings."""
+        if result.profile is not None:
+            result.profile = result.profile.with_phases(
+                self.plan.phase_timings()
+            )
+        return result
 
     def run_many(
         self,
@@ -822,9 +888,12 @@ class Executable:
         """
         self._enter_run("run_many batch")
         try:
-            return self.program.run_many(
-                list(inputs), max_concurrent=max_concurrent
-            )
+            return [
+                self._with_phases(r)
+                for r in self.program.run_many(
+                    list(inputs), max_concurrent=max_concurrent
+                )
+            ]
         finally:
             self._exit_run()
 

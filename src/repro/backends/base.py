@@ -63,6 +63,9 @@ class ExecutionResult:
     backend: str
     data: dict[str, dict[str, Any]]
     stats: Any = None
+    #: :class:`repro.obs.RunProfile` when the run was traced
+    #: (``lower(..., trace=True)``), else ``None``.
+    profile: Any = None
 
     def payload(self, location: str, data: str) -> Any:
         return self.data[location][data]
@@ -220,5 +223,7 @@ class Backend(ABC):
         # "schedule" is the uniform hand-down of the placement scheduler's
         # ScheduleReport (repro.sched): Plan.lower attaches it for every
         # backend; backends may consult it (the jax backend groups rack
-        # members onto devices) or ignore it.
-        return frozenset({"schedule"})
+        # members onto devices) or ignore it.  "trace" turns on the
+        # repro.obs span recorder — every backend understands it and
+        # attaches a RunProfile to its results.
+        return frozenset({"schedule", "trace"})

@@ -45,12 +45,27 @@ class InprocessProgram(BackendProgram):
         kwargs = dict(self.options)
         kwargs.pop("schedule", None)  # placement already baked into the IR
         kwargs.setdefault("expected_s", expected or None)
+        if kwargs.pop("trace", False):
+            from repro.obs.events import TraceRecorder
+
+            kwargs["recorder"] = TraceRecorder()
         return ProgramRuntime(
             program or self.program,
             dict(self.steps),
             initial_payloads=initial_payloads,
             completed=completed,
             **kwargs,
+        )
+
+    def _profile(self, rt, stats):
+        if rt.recorder is None:
+            return None
+        from repro.obs.profile import RunProfile
+
+        # Lazy: spans materialise on first access, not per run.
+        return RunProfile.from_recorder(
+            "inprocess", rt.recorder,
+            wall_s=getattr(stats, "wall_s", 0.0) or None,
         )
 
     def run(
@@ -72,7 +87,8 @@ class InprocessProgram(BackendProgram):
         self._runtime = rt
         stats = rt.run()
         return ExecutionResult(
-            backend="inprocess", data=self._collect(rt), stats=stats
+            backend="inprocess", data=self._collect(rt), stats=stats,
+            profile=self._profile(rt, stats),
         )
 
     def _run_instance(
@@ -85,7 +101,8 @@ class InprocessProgram(BackendProgram):
         rt = self._build_runtime(initial_payloads)
         stats = rt.run()
         return ExecutionResult(
-            backend="inprocess", data=self._collect(rt), stats=stats
+            backend="inprocess", data=self._collect(rt), stats=stats,
+            profile=self._profile(rt, stats),
         )
 
     def _collect(self, rt) -> dict[str, dict[str, Any]]:

@@ -21,11 +21,18 @@ implement at scale (see ``launch/sharding.py``).
 
 from __future__ import annotations
 
+import time
 from typing import Any, Mapping
 
 from repro.core.compile import StepMeta
 from repro.core.syntax import WorkflowSystem
-from repro.exec.interp import Cursor, enabled_exec_picks, first_enabled_comm
+from repro.exec.interp import (
+    Cursor,
+    enabled_exec_picks,
+    first_enabled_comm,
+    record_comm_fire,
+    record_exec_fire,
+)
 from repro.exec.program import ExecProgram
 
 from .base import Backend, BackendProgram, ExecutionResult, PayloadKey
@@ -65,6 +72,11 @@ class JaxMeshProgram(BackendProgram):
     ) -> ExecutionResult:
         import jax
 
+        recorder = None
+        if self.options.get("trace"):
+            from repro.obs.events import TraceRecorder
+
+            recorder = TraceRecorder()
         device_of = self._device_map()
         stats = {
             "execs": 0,
@@ -99,9 +111,17 @@ class JaxMeshProgram(BackendProgram):
             cursors[src].complete(i)
             cursors[op.dst].complete(j)
             data[op.dst].add(op.data)
-            payloads[(op.dst, op.data)] = place(
-                op.dst, payloads[(op.src, op.data)]
-            )
+            if recorder is None:
+                payloads[(op.dst, op.data)] = place(
+                    op.dst, payloads[(op.src, op.data)]
+                )
+            else:
+                payload = payloads[(op.src, op.data)]
+                t0 = time.monotonic()
+                payloads[(op.dst, op.data)] = place(op.dst, payload)
+                record_comm_fire(
+                    recorder, op, t0, time.monotonic(), payload
+                )
             stats["comms"] += 1
             return True
 
@@ -120,7 +140,12 @@ class JaxMeshProgram(BackendProgram):
                 op, picks = execs[0]
                 leader = min(op.locations)
                 inputs = {d: payloads[(leader, d)] for d in op.inputs}
-                out = self.steps[op.step].fn(inputs)
+                if recorder is None:
+                    out = self.steps[op.step].fn(inputs)
+                else:
+                    t0 = time.monotonic()
+                    out = self.steps[op.step].fn(inputs)
+                    record_exec_fire(recorder, op, t0, time.monotonic())
                 missing = set(op.outputs) - set(out)
                 if missing:
                     raise RuntimeError(
@@ -150,7 +175,14 @@ class JaxMeshProgram(BackendProgram):
         }
         for (loc, d), v in payloads.items():
             result.setdefault(loc, {})[d] = v
-        return ExecutionResult(backend="jax", data=result, stats=stats)
+        profile = None
+        if recorder is not None:
+            from repro.obs.profile import RunProfile
+
+            profile = RunProfile.from_recorder("jax", recorder)
+        return ExecutionResult(
+            backend="jax", data=result, stats=stats, profile=profile
+        )
 
 
 class JaxBackend(Backend):

@@ -233,10 +233,17 @@ def _worker_main(cfg: dict) -> None:
     """Entry point of one worker: run my locations' bundles to completion.
 
     Control-plane protocol (worker → coordinator over the duplex pipe):
-    ``("ready", wid, pid)`` → *waits for* ``("go",)`` → then any number of
-    ``("exec", wid, loc, step)`` / ``("delta", loc, step, outputs)`` /
-    finally one of ``("done", wid, data)`` or
-    ``("error", wid, loc, step, reason)``.
+    ``("ready", wid, pid, monotonic)`` → *waits for* ``("go",)`` → then any
+    number of ``("exec", wid, loc, step)`` / ``("delta", loc, step,
+    outputs)`` / ``("spans", wid, events)`` / finally one of
+    ``("done", wid, data)`` or ``("error", wid, loc, step, reason)``.
+
+    The worker's ``time.monotonic()`` rides on the ready message so the
+    coordinator can align span timestamps recorded on this process's
+    clock (workers record absolute monotonic time via ``t_zero=0.0``);
+    span batches are flushed incrementally — before each step body and
+    before done/error — so a SIGKILLed worker's earlier spans survive up
+    to the last coordinator merge.
     """
     ctl = cfg["ctl"]
     wid = cfg["worker_id"]
@@ -249,6 +256,16 @@ def _worker_main(cfg: dict) -> None:
                 ctl.send(msg)
             except (OSError, BrokenPipeError, ValueError):
                 pass  # coordinator is gone; nothing left to report to
+
+    recorder = None
+    if cfg.get("trace"):
+        from repro.obs.events import TraceRecorder
+
+        recorder = TraceRecorder(t_zero=0.0)
+
+    def flush_spans() -> None:
+        if recorder is not None and len(recorder):
+            tell(("spans", wid, recorder.drain()))
 
     try:
         from repro.workflow.threaded import ThreadedProgramRuntime
@@ -266,7 +283,7 @@ def _worker_main(cfg: dict) -> None:
             # Co-resident locations (schedule pinning / workers= packing)
             # talk in memory instead of through socket loopback.
             transport = HybridTransport(transport, cfg["locations"])
-        tell(("ready", wid, os.getpid()))
+        tell(("ready", wid, os.getpid(), time.monotonic()))
         if ctl.recv() != ("go",):  # coordinator aborted startup
             return
 
@@ -280,6 +297,7 @@ def _worker_main(cfg: dict) -> None:
         def wrap(loc: str, step: str, fn):
             def run(inputs, _loc=loc, _step=step, _fn=fn):
                 current[_loc] = _step
+                flush_spans()  # ship earlier ops' spans before this step
                 tell(("exec", wid, _loc, _step))
                 if kill_at is not None and _step == kill_at:
                     os.kill(os.getpid(), signal.SIGKILL)  # fault injection
@@ -323,11 +341,13 @@ def _worker_main(cfg: dict) -> None:
             initial_payloads=init,
             transport=transport,
             timeout_s=cfg["timeout_s"],
+            recorder=recorder,
         )
         try:
             data = rt.run()
         except BaseException as e:  # noqa: BLE001
             loc, err = (rt.errors or [(cfg["locations"][0], e)])[0]
+            flush_spans()
             tell(
                 (
                     "error",
@@ -338,6 +358,7 @@ def _worker_main(cfg: dict) -> None:
                 )
             )
             return
+        flush_spans()
         tell(("done", wid, {l: dict(d) for l, d in data.items()}))
     except BaseException as e:  # noqa: BLE001
         loc = cfg["locations"][0] if cfg["locations"] else None
@@ -358,6 +379,10 @@ class MultiprocessProgram(BackendProgram):
     _completed = None  # set of completed step names
     _pending_ckpt = None
     last_pids = {}  # worker id -> OS pid of the last run (never mutated)
+    #: RunProfile of the last traced run — set even when the run raised
+    #: (e.g. a SIGKILLed worker), holding every span merged before the
+    #: failure.  ``None`` when the last run was untraced.
+    last_profile = None
 
     def _run_instance(
         self,
@@ -387,6 +412,14 @@ class MultiprocessProgram(BackendProgram):
         timeout_s = float(opts.pop("timeout_s", DEFAULT_TIMEOUT_S))
         ack_timeout = float(opts.pop("ack_timeout", 1.0))
         kill_at = opts.pop("_kill_at_step", None)
+        tracing = bool(opts.pop("trace", False))
+        recorder = None
+        offsets: dict[int, float] = {}  # wid -> additive clock shift
+        if tracing:
+            from repro.obs.events import TraceRecorder
+
+            recorder = TraceRecorder()
+        self.last_profile = None
 
         transport_cls = get_transport(transport_name)
         if not getattr(transport_cls, "crosses_processes", False):
@@ -438,6 +471,14 @@ class MultiprocessProgram(BackendProgram):
             if kind == "ready":
                 ready.add(wid)
                 pids[wid] = msg[2]
+                if recorder is not None and len(msg) > 3:
+                    # Clock alignment piggybacked on the handshake: the
+                    # worker's monotonic instant maps to "now" here, so a
+                    # worker-absolute span time t lands on this recorder's
+                    # clock at t + offset.
+                    offsets[wid] = (
+                        time.monotonic() - msg[3] - recorder.t_zero
+                    )
                 if not started and len(ready) == len(procs):
                     started = True
                     for c in list(live_conns):
@@ -456,6 +497,9 @@ class MultiprocessProgram(BackendProgram):
                     # The step finished — a later crash while e.g. blocked
                     # on a recv must not be pinned on it (step=None then).
                     del last_exec[wid]
+            elif kind == "spans":
+                if recorder is not None:
+                    recorder.absorb(msg[2], offset=offsets.get(wid, 0.0))
             elif kind == "done":
                 finals[wid] = msg[2]
                 pending.discard(wid)
@@ -501,6 +545,7 @@ class MultiprocessProgram(BackendProgram):
                     timeout_s=timeout_s,
                     ack_timeout=ack_timeout,
                     kill_at_step=kill_at,
+                    trace=tracing,
                 )
                 proc = ctx.Process(
                     target=_worker_main,
@@ -587,6 +632,15 @@ class MultiprocessProgram(BackendProgram):
             shutil.rmtree(tmpdir, ignore_errors=True)
             self.last_pids = dict(pids)
 
+        profile = None
+        if recorder is not None:
+            from repro.obs.profile import RunProfile
+
+            profile = RunProfile.from_recorder("multiprocess", recorder)
+            # Survives even a failed run: everything merged before the
+            # worker died is inspectable post-mortem.
+            self.last_profile = profile
+
         if failure is not None:
             if failure[0] == "timeout":
                 raise TimeoutError(
@@ -620,6 +674,7 @@ class MultiprocessProgram(BackendProgram):
                 "transport": transport_name,
                 "start_method": start_method,
             },
+            profile=profile,
         )
 
     # -- checkpoint capability ----------------------------------------------

@@ -93,40 +93,48 @@ class ThreadedProgram(BackendProgram):
             for lp in self.program.programs
         }
 
-    def _execute(
-        self,
-        transport,
-        initial_payloads: Mapping[PayloadKey, Any] | None,
-        *,
-        timeout_s: float,
-        instance_tag: str | None = None,
-    ) -> dict[str, dict[str, Any]]:
+    @staticmethod
+    def _make_recorder(opts: dict[str, Any]):
+        if not opts.pop("trace", False):
+            return None
+        from repro.obs.events import TraceRecorder
+
+        return TraceRecorder()
+
+    @staticmethod
+    def _profile(recorder):
+        if recorder is None:
+            return None
+        from repro.obs.profile import RunProfile
+
+        # Lazy: detaches the raw buffers; spans materialise on first
+        # access, not per instance on the run_many hot path.
+        return RunProfile.from_recorder("threaded", recorder)
+
+    def run(
+        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
+    ) -> ExecutionResult:
         from repro.workflow.threaded import ThreadedProgramRuntime
 
+        opts = dict(self.options)
+        opts.pop("schedule", None)  # placement already baked into the IR
+        timeout_s = float(opts.pop("timeout_s", 60.0))
+        recorder = self._make_recorder(opts)
+        transport = self._make_transport(opts)
         rt = ThreadedProgramRuntime(
             self.program.by_location,
             self._local_steps(),
             initial_payloads=initial_payloads,
             transport=transport,
             timeout_s=timeout_s,
-            instance_tag=instance_tag,
+            recorder=recorder,
         )
-        return rt.run()
-
-    def run(
-        self, initial_payloads: Mapping[PayloadKey, Any] | None = None
-    ) -> ExecutionResult:
-        opts = dict(self.options)
-        opts.pop("schedule", None)  # placement already baked into the IR
-        timeout_s = float(opts.pop("timeout_s", 60.0))
-        transport = self._make_transport(opts)
-        data = self._execute(
-            transport, initial_payloads, timeout_s=timeout_s
-        )
+        data = rt.run()
         return ExecutionResult(
             backend="threaded",
             data={loc: dict(d) for loc, d in data.items()},
             stats=transport.stats(),
+            profile=self._profile(recorder),
         )
 
     def run_many(
@@ -163,6 +171,7 @@ class ThreadedProgram(BackendProgram):
         opts = dict(self.options)
         opts.pop("schedule", None)
         timeout_s = float(opts.pop("timeout_s", 60.0))
+        tracing = bool(opts.pop("trace", False))
         transport = self._make_transport(opts)
         batch_tag = f"b{next(_BATCH_SEQ)}"
         programs = self.program.by_location
@@ -180,6 +189,11 @@ class ThreadedProgram(BackendProgram):
         # One pre-built runtime per instance: cheap (dict setup only —
         # programs, step registries and control specs are shared), and the
         # per-instance endpoint tag keeps the shared transport partitioned.
+        recorders = [None] * len(inputs)
+        if tracing:
+            from repro.obs.events import TraceRecorder
+
+            recorders = [TraceRecorder() for _ in inputs]
         runtimes = [
             ThreadedProgramRuntime(
                 programs,
@@ -190,6 +204,7 @@ class ThreadedProgram(BackendProgram):
                 instance_tag=f"{batch_tag}.{i}",
                 branch_pool=branch_pool,
                 validate=False,  # compile() already checked coverage
+                recorder=recorders[i],
             )
             for i, payloads in enumerate(inputs)
         ]
@@ -230,13 +245,14 @@ class ThreadedProgram(BackendProgram):
         # mutation through one result never aliases the others.
         stats = transport.stats()
         results = []
-        for rt in runtimes:
+        for rt, recorder in zip(runtimes, recorders):
             rt._raise_first_error()
             results.append(
                 ExecutionResult(
                     backend="threaded",
                     data={loc: dict(d) for loc, d in rt.data.items()},
                     stats=dict(stats, batch_instances=len(runtimes)),
+                    profile=self._profile(recorder),
                 )
             )
         return results

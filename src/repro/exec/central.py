@@ -36,7 +36,13 @@ from typing import Any, Mapping
 from repro.core.compile import StepMeta
 from repro.core.parser import dumps
 
-from .interp import Cursor, enabled_exec_picks, first_enabled_comm
+from .interp import (
+    Cursor,
+    enabled_exec_picks,
+    first_enabled_comm,
+    record_comm_fire,
+    record_exec_fire,
+)
 from .program import ExecOp, ExecProgram
 
 PayloadKey = tuple[str, str]  # (location, data_name)
@@ -69,6 +75,7 @@ class ProgramRuntime:
         checkpoint_path: str | Path | None = None,
         heartbeat=None,
         completed: frozenset[str] = frozenset(),
+        recorder=None,
     ):
         from repro.workflow.fault import (
             HeartbeatMonitor,
@@ -88,6 +95,7 @@ class ProgramRuntime:
         self.checkpoint_path = Path(checkpoint_path) if checkpoint_path else None
         self.heartbeat = heartbeat or HeartbeatMonitor(timeout_s=60.0)
         self.stats = RunStats()
+        self.recorder = recorder
         self.completed_execs: set[str] = set(completed)
         self._replayable = frozenset(completed)
         self._lock = threading.Lock()
@@ -163,10 +171,12 @@ class ProgramRuntime:
                 self.cursors[src].complete(i)
                 self.cursors[op.dst].complete(j)
                 self.data[op.dst].add(op.data)
-                self.payloads[(op.dst, op.data)] = self.payloads[
-                    (op.src, op.data)
-                ]
+                payload = self.payloads[(op.src, op.data)]
+                self.payloads[(op.dst, op.data)] = payload
                 self.stats.comms += 1
+                if self.recorder is not None:
+                    t = time.monotonic()
+                    record_comm_fire(self.recorder, op, t, t, payload)
                 n += 1
 
     def _enabled_execs(self) -> list[tuple[ExecOp, tuple[tuple[str, int], ...]]]:
@@ -208,6 +218,8 @@ class ProgramRuntime:
             )
         with self._lock:
             self.stats.exec_log.append((op.step, leader, dt))
+        if self.recorder is not None:
+            record_exec_fire(self.recorder, op, t0, t0 + dt)
         for l in op.locations:
             self.heartbeat.beat(l)
         return {d: out[d] for d in op.outputs}

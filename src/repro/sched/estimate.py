@@ -151,3 +151,38 @@ class CostModel:
             if isinstance(meta, StepMeta) and meta.expected_seconds is not None
         }
         return cls(default_exec_s=default_exec_s, costs=costs)
+
+    @classmethod
+    def from_profile(
+        cls,
+        profile: Any,
+        *,
+        default_exec_s: float = 1e-3,
+    ) -> "CostModel":
+        """Calibrate per-step costs from a measured run.
+
+        ``profile`` is a :class:`repro.obs.RunProfile` (anything with an
+        ``exec_durations() -> {step: [seconds, ...]}`` method) or a plain
+        mapping ``step -> seconds`` / ``step -> [seconds, ...]``.  Each
+        step's cost becomes the mean of its measured exec-span durations,
+        closing the loop between the simulator's guesses and what a
+        backend actually did.
+        """
+        if hasattr(profile, "exec_durations"):
+            samples: Mapping[str, Any] = profile.exec_durations()
+        elif isinstance(profile, Mapping):
+            samples = profile
+        else:
+            raise TypeError(
+                "from_profile needs a RunProfile or a mapping, got "
+                f"{type(profile).__name__}"
+            )
+        costs: dict[str, float] = {}
+        for step, val in samples.items():
+            if isinstance(val, (int, float)):
+                costs[step] = float(val)
+            else:
+                vals = [float(v) for v in val]
+                if vals:
+                    costs[step] = sum(vals) / len(vals)
+        return cls(default_exec_s=default_exec_s, costs=costs)

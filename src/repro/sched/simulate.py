@@ -61,12 +61,19 @@ class SimulationError(RuntimeError):
 
 @dataclass(frozen=True)
 class SimEvent:
-    """One timeline entry at a location."""
+    """One timeline entry at a location.
+
+    ``name`` is the bare subject of the event — the step for ``exec``,
+    the datum for ``send``, the port for ``recv`` — so profilers can
+    match predicted events against recorded spans without parsing
+    ``label``.
+    """
 
     start: float
     end: float
     kind: str  # "exec" | "send" | "recv"
     label: str
+    name: str | None = None
 
     def pretty(self) -> str:
         return f"[{self.start * 1e3:8.2f}ms → {self.end * 1e3:8.2f}ms] {self.label}"
@@ -381,7 +388,18 @@ def simulate(
         loc: [] for loc in system.locations()
     }
     for ev in events:
-        entry = SimEvent(start[ev.eid], finish[ev.eid], ev.kind, ev.label)
+        act = ev.action
+        if isinstance(act, Exec):
+            name: str | None = act.step
+        elif isinstance(act, Send):
+            name = act.data
+        elif isinstance(act, Recv):
+            name = act.port
+        else:
+            name = None
+        entry = SimEvent(
+            start[ev.eid], finish[ev.eid], ev.kind, ev.label, name
+        )
         for loc in ev.locations:
             timelines[loc].append(entry)
     for loc in timelines:

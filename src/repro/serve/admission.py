@@ -260,6 +260,18 @@ class AdmissionController:
         )
 
     # -- introspection ---------------------------------------------------------
+    def queue_depths(self) -> dict[str, dict[str, int]]:
+        """Per-tenant ``{queued, active}`` — the drain-aware routing view.
+
+        A strict subset of :meth:`stats`, cheap enough for load balancers
+        to poll through the unauthenticated health endpoint.
+        """
+        depths: dict[str, dict[str, int]] = {}
+        for name, st in self._tenants.items():
+            with st.lock:
+                depths[name] = {"queued": len(st.queue), "active": st.active}
+        return depths
+
     def stats(self) -> dict[str, Any]:
         return {
             "draining": self._draining,

@@ -23,6 +23,7 @@ gateway's ``GET /v1/stats``).
 
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from collections import OrderedDict
@@ -32,6 +33,8 @@ from typing import Any
 from repro.api import Executable, Plan
 
 __all__ = ["CacheEntry", "PlanCache"]
+
+logger = logging.getLogger("repro.serve.cache")
 
 
 @dataclass
@@ -141,6 +144,8 @@ class PlanCache:
                     for digest in self._aliases.pop(fp, ()):
                         self._by_source.pop(digest, None)
                     self._stats["evictions"] += 1
+                    logger.info("evicted %s (LRU, capacity %d)",
+                                fp[:12], self.capacity)
             if source_digest is not None:
                 self._by_source[source_digest] = entry.fingerprint
                 self._aliases.setdefault(entry.fingerprint, set()).add(

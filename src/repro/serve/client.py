@@ -86,6 +86,7 @@ class GatewayClient:
         body: Any = None,
         *,
         content_type: str = "application/json",
+        raw: bool = False,
     ) -> Any:
         if isinstance(body, (str, bytes)):
             payload = body.encode() if isinstance(body, str) else body
@@ -111,12 +112,17 @@ class GatewayClient:
                 self.close()
                 if attempt:
                     raise
-        raw = resp.read()
-        decoded = json.loads(raw) if raw else None
+        data = resp.read()
         if resp.status >= 400:
+            try:
+                decoded = json.loads(data) if data else None
+            except json.JSONDecodeError:
+                decoded = data.decode("utf-8", errors="replace")
             retry_after = int(resp.getheader("Retry-After") or 0)
             raise GatewayError(resp.status, decoded, retry_after=retry_after)
-        return decoded
+        if raw:
+            return data.decode("utf-8", errors="replace")
+        return json.loads(data) if data else None
 
     # -- API ------------------------------------------------------------------
     def submit(self, body: Any) -> dict[str, Any]:
@@ -176,3 +182,7 @@ class GatewayClient:
 
     def healthz(self) -> dict[str, Any]:
         return self._request("GET", "/v1/healthz")
+
+    def metrics(self) -> str:
+        """The Prometheus text exposition page, verbatim."""
+        return self._request("GET", "/v1/metrics", raw=True)

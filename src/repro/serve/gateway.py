@@ -14,8 +14,21 @@ tenant by the admission controller):
                                            ``{results: [...]}`` through the
                                            backend's run_many lanes
 ``GET  /v1/stats``                         cache / admission / throughput
-``GET  /v1/healthz``                       liveness (no auth)
+``GET  /v1/healthz``                       liveness + drain state +
+                                           per-tenant queue depths (no auth)
+``GET  /v1/metrics``                       Prometheus text exposition
+                                           (no auth)
 =========================================  =================================
+
+Observability: every request carries a **trace id** — the caller's
+``X-Trace-Id`` header when present, otherwise a generated one — echoed in
+the response's ``X-Trace-Id`` header, embedded in every error body, bound
+to :data:`repro.obs.events.current_trace_id` for the request's duration,
+and attached to the ``repro.serve.gateway`` log records.  Request counts
+and latency histograms accumulate in the gateway's
+:class:`~repro.obs.metrics.MetricsRegistry`; ``GET /v1/metrics`` merges
+them with a scrape-time snapshot of ``WorkflowService.stats()``
+(plan-cache hit rate, per-tenant queue depth and rejection counts).
 
 Error contract: every failure is a JSON body ``{"error": {...}}`` — never
 a traceback.  ``400`` malformed submission (typed, with line/column for
@@ -36,13 +49,18 @@ accept loop.
 from __future__ import annotations
 
 import json
+import logging
 import re
 import threading
+import time
+import uuid
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any
 
 import numpy as np
 
+from repro.obs.events import current_trace_id
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.admission import AdmissionRejected, UnknownTenantError
 from repro.serve.service import (
     ServiceDraining,
@@ -52,6 +70,8 @@ from repro.serve.service import (
 from repro.serve.submission import SubmissionError
 
 __all__ = ["Gateway"]
+
+logger = logging.getLogger("repro.serve.gateway")
 
 #: Submissions and payloads beyond this are rejected before reading (413).
 MAX_BODY_BYTES = 64 * 1024 * 1024
@@ -66,6 +86,7 @@ _ROUTES = {
     ): "run_many",
     ("GET", re.compile(r"/v1/stats\Z")): "stats",
     ("GET", re.compile(r"/v1/healthz\Z")): "healthz",
+    ("GET", re.compile(r"/v1/metrics\Z")): "metrics",
 }
 
 
@@ -85,12 +106,35 @@ class _Handler(BaseHTTPRequestHandler):
     server_version = "swirl-gateway/0.1"
 
     # -- plumbing -------------------------------------------------------------
+    #: Set per request by ``_dispatch``; read back for metrics / logging.
+    _trace_id = ""
+    _last_status = 0
+
     def log_message(self, fmt: str, *args: Any) -> None:
-        pass  # request logging is the embedding application's concern
+        pass  # request logging goes through the module logger instead
 
     @property
     def gateway(self) -> "Gateway":
         return self.server.gateway  # type: ignore[attr-defined]
+
+    def _send_payload(
+        self,
+        status: int,
+        payload: bytes,
+        *,
+        content_type: str,
+        headers: dict[str, str] | None = None,
+    ) -> None:
+        self._last_status = status
+        self.send_response(status)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(payload)))
+        if self._trace_id:
+            self.send_header("X-Trace-Id", self._trace_id)
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(payload)
 
     def _reply(
         self,
@@ -100,13 +144,21 @@ class _Handler(BaseHTTPRequestHandler):
         headers: dict[str, str] | None = None,
     ) -> None:
         payload = json.dumps(body, default=_jsonable).encode()
-        self.send_response(status)
-        self.send_header("Content-Type", "application/json")
-        self.send_header("Content-Length", str(len(payload)))
-        for k, v in (headers or {}).items():
-            self.send_header(k, v)
-        self.end_headers()
-        self.wfile.write(payload)
+        self._send_payload(
+            status, payload, content_type="application/json", headers=headers
+        )
+
+    def _reply_text(
+        self,
+        status: int,
+        text: str,
+        *,
+        content_type: str = "text/plain; charset=utf-8",
+        headers: dict[str, str] | None = None,
+    ) -> None:
+        self._send_payload(
+            status, text.encode(), content_type=content_type, headers=headers
+        )
 
     def _error(
         self,
@@ -115,6 +167,8 @@ class _Handler(BaseHTTPRequestHandler):
         *,
         headers: dict[str, str] | None = None,
     ) -> None:
+        if self._trace_id:
+            error = {**error, "trace_id": self._trace_id}
         self._reply(status, {"error": error}, headers=headers)
 
     def _read_body(self) -> Any:
@@ -150,34 +204,69 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _dispatch(self, method: str) -> None:
         path = self.path.split("?", 1)[0]
-        for (m, pattern), name in _ROUTES.items():
-            if m != method:
-                continue
-            match = pattern.match(path)
-            if match:
-                self._handle(name, match.groupdict())
-                return
-        self._error(
-            404,
-            {
-                "type": "NotFound",
-                "message": f"no route {method} {path}",
-                "routes": sorted(
-                    f"{m} {p.pattern}" for (m, p) in _ROUTES
-                ),
-            },
+        self._trace_id = (
+            (self.headers.get("X-Trace-Id") or "").strip()
+            or uuid.uuid4().hex[:16]
         )
+        self._last_status = 0
+        token = current_trace_id.set(self._trace_id)
+        route = "unmatched"
+        t0 = time.perf_counter()
+        try:
+            for (m, pattern), name in _ROUTES.items():
+                if m != method:
+                    continue
+                match = pattern.match(path)
+                if match:
+                    route = name
+                    self._handle(name, match.groupdict())
+                    return
+            self._error(
+                404,
+                {
+                    "type": "NotFound",
+                    "message": f"no route {method} {path}",
+                    "routes": sorted(
+                        f"{m} {p.pattern}" for (m, p) in _ROUTES
+                    ),
+                },
+            )
+        finally:
+            current_trace_id.reset(token)
+            elapsed = time.perf_counter() - t0
+            self.gateway.observe_request(
+                route, method, self._last_status, elapsed
+            )
+            logger.info(
+                "%s %s -> %d in %.3fms [trace_id=%s]",
+                method,
+                path,
+                self._last_status,
+                elapsed * 1e3,
+                self._trace_id,
+            )
 
     def _handle(self, name: str, params: dict[str, str]) -> None:
         service = self.gateway.service
         if name == "healthz":
+            # Unauthenticated on purpose: load balancers poll this to
+            # drain-aware route, so it must never require a tenant key.
+            draining = service.admission.draining
             self._reply(
                 200,
                 {
-                    "status": (
-                        "draining" if service.admission.draining else "ok"
-                    )
+                    "status": "draining" if draining else "ok",
+                    "draining": draining,
+                    "tenants": service.admission.queue_depths(),
                 },
+            )
+            return
+        if name == "metrics":
+            # Also unauthenticated — the Prometheus scrape convention.
+            self._reply_text(
+                200,
+                self.gateway.render_metrics(),
+                content_type=MetricsRegistry.CONTENT_TYPE,
             )
             return
         try:
@@ -271,6 +360,12 @@ class _Handler(BaseHTTPRequestHandler):
         except BrokenPipeError:
             raise  # client went away mid-reply; nothing to report to it
         except Exception as e:  # noqa: BLE001 — the no-traceback contract
+            logger.exception(
+                "unhandled %s in %s [trace_id=%s]",
+                type(e).__name__,
+                name,
+                self._trace_id,
+            )
             self._error(
                 500,
                 {"type": type(e).__name__, "message": str(e)},
@@ -295,6 +390,15 @@ class Gateway:
         port: int = 0,
     ):
         self.service = service
+        self.metrics = MetricsRegistry()
+        self._requests = self.metrics.counter(
+            "gateway_requests_total",
+            "HTTP requests handled, by route / method / status.",
+        )
+        self._latency = self.metrics.histogram(
+            "gateway_request_seconds",
+            "Wall-clock request latency in seconds, by route.",
+        )
         self._httpd = ThreadingHTTPServer((host, port), _Handler)
         self._httpd.daemon_threads = True
         self._httpd.gateway = self  # type: ignore[attr-defined]
@@ -310,6 +414,68 @@ class Gateway:
     def url(self) -> str:
         host, port = self.address
         return f"http://{host}:{port}"
+
+    # -- observability ---------------------------------------------------------
+    def observe_request(
+        self, route: str, method: str, status: int, seconds: float
+    ) -> None:
+        """Handler hook: record one finished request in the registry."""
+        self._requests.inc(route=route, method=method, status=str(status))
+        self._latency.observe(seconds, route=route)
+
+    def render_metrics(self) -> str:
+        """Prometheus text page: request metrics + a service snapshot.
+
+        Snapshot-sourced families (cache, admission, counters) are set
+        absolutely at scrape time from :meth:`WorkflowService.stats`, so
+        the service keeps its single source of truth and the exposition
+        never drifts from ``GET /v1/stats``.
+        """
+        stats = self.service.stats()
+        m = self.metrics
+        m.gauge(
+            "gateway_uptime_seconds", "Seconds since the service started."
+        ).set(stats["uptime_s"])
+        counters = m.counter(
+            "service_operations_total",
+            "Service-level operation counters, by kind.",
+        )
+        for kind, value in stats["counters"].items():
+            counters.set(value, kind=kind)
+        cache = stats["cache"]
+        for key in ("hits", "misses", "evictions"):
+            m.counter(
+                f"plan_cache_{key}_total", f"Plan-cache {key}."
+            ).set(cache.get(key, 0))
+        m.gauge(
+            "plan_cache_hit_rate", "Plan-cache hit rate over its lifetime."
+        ).set(cache.get("hit_rate", 0.0))
+        m.gauge("plan_cache_entries", "Compiled plans resident.").set(
+            cache.get("entries", 0)
+        )
+        m.gauge(
+            "plan_cache_compile_seconds_saved",
+            "Compile time avoided by cache hits.",
+        ).set(cache.get("compile_seconds_saved", 0.0))
+        admission = stats["admission"]
+        m.gauge(
+            "gateway_draining", "1 while the gateway drains, else 0."
+        ).set(1.0 if admission["draining"] else 0.0)
+        queued = m.gauge(
+            "tenant_queue_depth", "Requests waiting for a slot, per tenant."
+        )
+        active = m.gauge(
+            "tenant_active_runs", "Admitted in-flight runs, per tenant."
+        )
+        rejected = m.counter(
+            "tenant_rejected_total",
+            "Admission rejections (HTTP 429), per tenant.",
+        )
+        for tenant, snap in admission["tenants"].items():
+            queued.set(snap["queued"], tenant=tenant)
+            active.set(snap["active"], tenant=tenant)
+            rejected.set(snap["rejected"], tenant=tenant)
+        return m.render()
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> "Gateway":

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import threading
 import time
 from typing import Any, Mapping, Sequence
@@ -48,6 +49,15 @@ from repro.serve.submission import (
 )
 
 __all__ = ["ServiceDraining", "WorkflowService", "UnknownWorkflowError"]
+
+logger = logging.getLogger("repro.serve.service")
+
+
+def _trace_tag() -> str:
+    """The request's trace id (bound by the gateway), or ``"-"``."""
+    from repro.obs.events import current_trace_id
+
+    return current_trace_id.get() or "-"
 
 #: The open single-tenant default: embedding apps and quickstarts that do
 #: not care about multi-tenancy authenticate with an empty API key.
@@ -181,6 +191,12 @@ class WorkflowService:
         )
         entry = self.cache.put(entry, source_digest=digest)
         self._count(compiles=1)
+        logger.info(
+            "compiled %s in %.1fms [trace_id=%s]",
+            fingerprint[:12],
+            entry.compile_seconds * 1e3,
+            _trace_tag(),
+        )
         return self._receipt(entry, cached=False)
 
     def _receipt(self, entry: CacheEntry, *, cached: bool) -> dict[str, Any]:
@@ -225,8 +241,14 @@ class WorkflowService:
                 result = self._run_guarded(
                     entry, lambda exe: exe.run(initial_payloads=payloads)
                 )
-            except Exception:
+            except Exception as e:
                 self._count(instances_failed=1)
+                logger.warning(
+                    "run %s failed: %s [trace_id=%s]",
+                    fingerprint[:12],
+                    e,
+                    _trace_tag(),
+                )
                 raise
         self._count(instances_completed=1)
         return {"fingerprint": fingerprint, "data": result.data}

@@ -19,10 +19,16 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
+from time import monotonic as _mono
 from typing import Any, Mapping
 
 from repro.core.compile import LocationBundle, StepMeta
 from repro.core.syntax import Exec, Nil, Par, Recv, Send, Seq, Trace
+from repro.exec.interp import (
+    record_exec_fire,
+    record_recv_fire,
+    record_send_fire,
+)
 from repro.exec.program import (
     K_ACT,
     K_PAR,
@@ -116,6 +122,7 @@ class ThreadedProgramRuntime:
         instance_tag: str | None = None,
         branch_pool=None,
         validate: bool = True,
+        recorder=None,
     ):
         self.programs = dict(programs)
         self.steps = {loc: dict(metas) for loc, metas in steps.items()}
@@ -132,6 +139,7 @@ class ThreadedProgramRuntime:
         #: per Par node per instance (the pool is sized by the static branch
         #: count so blocked branches can never starve each other).
         self._branch_pool = branch_pool
+        self.recorder = recorder
         self.transport = transport or InMemoryTransport(ChannelRegistry())
         self.timeout_s = timeout_s
         self.instance_tag = instance_tag
@@ -182,28 +190,47 @@ class ThreadedProgramRuntime:
 
     # -- per-location interpreter ----------------------------------------------
     def _run_op(self, loc: str, op) -> None:
+        rec = self.recorder
         if isinstance(op, SendOp):
             # The datum may be produced by a sibling branch — wait for it.
             payload = self._wait_data(loc, (op.data,))[op.data]
-            self.transport.send(self._endpoint(op), op.data, payload)
+            if rec is None:
+                self.transport.send(self._endpoint(op), op.data, payload)
+            else:
+                t0 = _mono()
+                self.transport.send(self._endpoint(op), op.data, payload)
+                record_send_fire(rec, op, t0, _mono(), payload)
             return
         if isinstance(op, RecvOp):
-            msg = self.transport.recv(
-                self._endpoint(op), timeout=self.timeout_s
-            )
+            if rec is None:
+                msg = self.transport.recv(
+                    self._endpoint(op), timeout=self.timeout_s
+                )
+            else:
+                t0 = _mono()
+                msg = self.transport.recv(
+                    self._endpoint(op), timeout=self.timeout_s
+                )
+                record_recv_fire(rec, op, t0, _mono(), msg.payload)
             self._put_data(loc, {msg.data_name: msg.payload})
             return
         # ExecOp
         meta = self.steps[loc][op.step]
         if not op.is_spatial:
             inputs = self._wait_data(loc, op.inputs)
-            out = meta.fn(inputs)
+            if rec is None:
+                out = meta.fn(inputs)
+            else:
+                t0 = _mono()
+                out = meta.fn(inputs)
+                record_exec_fire(rec, op, t0, _mono(), (loc,))
             self._put_data(loc, {d: out[d] for d in op.outputs})
             return
         # Spatial constraint: the op's pre-resolved leader flag elects who
         # runs the step body; everyone else synchronises on the barrier
         # (the (EXEC) rule's "Out^D(s) added to every D_i").
         barrier = self._barrier_for(op)
+        t0 = _mono() if rec is not None else 0.0
         if op.leader:
             try:
                 inputs = self._wait_data(loc, op.inputs)
@@ -213,6 +240,8 @@ class ThreadedProgramRuntime:
                 barrier.fail(e)
                 raise
         outputs = barrier.wait(self.timeout_s)
+        if rec is not None:
+            record_exec_fire(rec, op, t0, _mono(), (loc,))
         self._put_data(loc, dict(outputs))
 
     def _run_node(self, loc: str, spec, nid: int) -> None:

@@ -461,7 +461,12 @@ class TestGatewayHTTP:
 
     def test_healthz_unauthenticated(self, gateway):
         with GatewayClient(gateway.url, api_key="not-a-key") as c:
-            assert c.healthz() == {"status": "ok"}
+            health = c.healthz()
+            assert health["status"] == "ok"
+            assert health["draining"] is False
+            assert health["tenants"] == {
+                "anonymous": {"queued": 0, "active": 0}
+            }
 
     def test_concurrent_client_batches_isolated(self, gateway):
         """Several HTTP clients share one cached Executable; every batch
@@ -636,7 +641,9 @@ class TestOverloadAndDrain:
         with GatewayClient(gw.url) as c:
             fp = c.submit(DAG_BODY)["fingerprint"]
             svc.drain(timeout_s=5)
-            assert c.healthz() == {"status": "draining"}
+            health = c.healthz()
+            assert health["status"] == "draining"
+            assert health["draining"] is True
             with pytest.raises(GatewayError) as exc:
                 c.submit(DAG_BODY)
             assert exc.value.status == 503
@@ -644,3 +651,160 @@ class TestOverloadAndDrain:
                 c.run(fp)
             assert exc.value.status == 503
         gw.close(drain_timeout_s=1)
+
+
+# ---------------------------------------------------------------------------
+# Observability: /v1/metrics, trace ids, drain-aware healthz
+# ---------------------------------------------------------------------------
+
+
+class TestObservability:
+    def test_metrics_unauthenticated_prometheus_text(self, gateway):
+        import http.client
+
+        with GatewayClient(gateway.url, api_key="not-a-key") as c:
+            fp_err = None
+            try:
+                c.describe("0" * 64)
+            except GatewayError as e:
+                fp_err = e
+            assert fp_err is not None and fp_err.status == 401
+            text = c.metrics()
+        assert text.endswith("\n")
+        # Exposition-format shape: every sample line's metric appears
+        # under a matching # TYPE header.
+        typed = {}
+        for line in text.splitlines():
+            if line.startswith("# TYPE "):
+                _, _, name, kind = line.split(" ")
+                typed[name] = kind
+        assert typed["gateway_requests_total"] == "counter"
+        assert typed["gateway_request_seconds"] == "histogram"
+        assert typed["tenant_queue_depth"] == "gauge"
+        assert typed["plan_cache_hit_rate"] == "gauge"
+        for line in text.splitlines():
+            if not line or line.startswith("#"):
+                continue
+            name = line.split("{")[0].split(" ")[0]
+            base = name
+            for suffix in ("_bucket", "_sum", "_count"):
+                if name.endswith(suffix) and name[: -len(suffix)] in typed:
+                    base = name[: -len(suffix)]
+            assert base in typed, f"untyped sample {name!r}"
+        # Content type is the Prometheus text exposition format.
+        host, port = gateway.address
+        conn = http.client.HTTPConnection(host, port, timeout=10)
+        conn.request("GET", "/v1/metrics")
+        resp = conn.getresponse()
+        resp.read()
+        assert resp.getheader("Content-Type").startswith(
+            "text/plain; version=0.0.4"
+        )
+        conn.close()
+
+    def test_metrics_track_requests_and_cache(self, gateway):
+        with GatewayClient(gateway.url) as c:
+            fp = c.submit(DAG_BODY)["fingerprint"]
+            c.submit(DAG_BODY)  # cache hit
+            c.run(fp)
+            text = c.metrics()
+        samples = {}
+        for line in text.splitlines():
+            if line and not line.startswith("#"):
+                key, value = line.rsplit(" ", 1)
+                samples[key] = float(value)
+        assert (
+            samples[
+                'gateway_requests_total{method="POST",route="submit",'
+                'status="200"}'
+            ]
+            == 2
+        )
+        assert (
+            samples[
+                'gateway_requests_total{method="POST",route="run",'
+                'status="200"}'
+            ]
+            == 1
+        )
+        assert samples["plan_cache_hits_total"] >= 1
+        assert samples['service_operations_total{kind="submissions"}'] == 2
+        assert samples['service_operations_total{kind="runs"}'] == 1
+        assert samples['gateway_request_seconds_count{route="submit"}'] == 2
+
+    def test_metrics_count_429_per_tenant(self):
+        tenants = [
+            TenantConfig("tiny", api_key="kt", max_concurrent=1, max_queue=0)
+        ]
+        svc = WorkflowService(step_registry(sleep_s=0.4), tenants=tenants)
+        with Gateway(svc) as gw:
+            with GatewayClient(gw.url, api_key="kt") as c:
+                fp = c.submit(DAG_BODY)["fingerprint"]
+                hold = threading.Thread(target=lambda: c2.run(fp))
+                with GatewayClient(gw.url, api_key="kt") as c2:
+                    hold.start()
+                    time.sleep(0.1)  # c2 occupies tiny's only slot
+                    with pytest.raises(GatewayError) as exc:
+                        c.run(fp)
+                    assert exc.value.status == 429
+                    text = c.metrics()
+                    hold.join(30)
+        assert 'tenant_rejected_total{tenant="tiny"} 1' in text
+        assert 'tenant_active_runs{tenant="tiny"} 1' in text
+
+    def test_trace_id_generated_and_echoed(self, gateway):
+        import http.client
+
+        host, port = gateway.address
+        conn = http.client.HTTPConnection(host, port, timeout=10)
+        conn.request("GET", "/v1/healthz")
+        resp = conn.getresponse()
+        resp.read()
+        generated = resp.getheader("X-Trace-Id")
+        assert generated and len(generated) == 16
+        conn.request(
+            "GET", "/v1/healthz", headers={"X-Trace-Id": "req-12345"}
+        )
+        resp = conn.getresponse()
+        resp.read()
+        assert resp.getheader("X-Trace-Id") == "req-12345"
+        conn.close()
+
+    def test_trace_id_in_error_bodies(self, client):
+        with pytest.raises(GatewayError) as exc:
+            client.describe("0" * 64)
+        trace_id = exc.value.error["trace_id"]
+        assert trace_id and isinstance(trace_id, str)
+        with pytest.raises(GatewayError) as exc:
+            client._request("POST", "/v1/workflows", {"bad": True})
+        assert exc.value.error["trace_id"]
+
+    def test_healthz_reports_queue_depths_per_tenant(self):
+        tenants = [
+            TenantConfig("busy", api_key="kb", max_concurrent=1, max_queue=4),
+            TenantConfig("idle", api_key="ki"),
+        ]
+        svc = WorkflowService(step_registry(sleep_s=0.4), tenants=tenants)
+        with Gateway(svc) as gw:
+            with GatewayClient(gw.url, api_key="kb") as c:
+                fp = c.submit(DAG_BODY)["fingerprint"]
+
+            def run_one():
+                with GatewayClient(gw.url, api_key="kb") as c2:
+                    c2.run(fp)
+
+            threads = [
+                threading.Thread(target=run_one) for _ in range(3)
+            ]
+            for t in threads:
+                t.start()
+            time.sleep(0.15)  # 1 active + 2 queued on "busy"
+            with GatewayClient(gw.url) as anon:
+                health = anon.healthz()
+            for t in threads:
+                t.join(30)
+        assert health["draining"] is False
+        busy = health["tenants"]["busy"]
+        assert busy["active"] == 1
+        assert busy["queued"] == 2
+        assert health["tenants"]["idle"] == {"queued": 0, "active": 0}
