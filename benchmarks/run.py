@@ -23,6 +23,10 @@ Prints ``name,value,unit,derived`` CSV rows.  Sections:
   cache-hit throughput across mixed plan shapes from concurrent keep-alive
   clients (p50/p99 + hit rate), plus an overload run (429s counted, zero
   dropped in-flight executions);
+* ``chaos``     — elastic recovery under chaos: run_many throughput and
+  result-correctness on the multiprocess backend while every instance's
+  worker is SIGKILLed mid-flight and recovered onto a spare (rename) or a
+  survivor (fold / pool resize);
 * ``bisim``     — LTS sizes + exact bisimulation check time (Thm. 1);
 * ``kernels``   — Pallas kernels (interpret mode) vs jnp references;
 * ``train``     — SWIRL-planned trainer steps/s (smoke config);
@@ -702,6 +706,110 @@ def bench_gateway() -> None:
     )
 
 
+def bench_chaos() -> None:
+    """Elastic recovery under chaos: sustained throughput while workers die.
+
+    Drives ``run_many`` batches through the multiprocess backend with a
+    SIGKILL injected into every instance mid-flight, in both recovery
+    modes: ``spare`` (the dead location's program is renamed onto a spare
+    and a fresh fleet respawned) and ``fold`` (the pool is resized — the
+    dead location's op array is spliced onto a survivor).  Acceptance:
+    every chaos-run instance produces the unperturbed run's data modulo
+    the recovery renaming, no step body re-executes after checkpointed
+    completion, and throughput under sustained kills stays a reasonable
+    fraction of the fault-free baseline.
+    """
+    from repro import swirl
+
+    edges = {
+        "c_pre": ["c_a", "c_b"],
+        "c_a": ["c_join"],
+        "c_b": ["c_join"],
+        "c_join": ["c_out"],
+        "c_out": [],
+    }
+    mapping = {
+        "c_pre": ("n0",),
+        "c_a": ("n1",),
+        "c_b": ("n2",),
+        "c_join": ("n1",),
+        "c_out": ("n0",),
+    }
+
+    def steps():
+        return {
+            "c_pre": lambda inp: {"d^c_pre": list(range(64))},
+            "c_a": lambda inp: {"d^c_a": sum(inp["d^c_pre"])},
+            "c_b": lambda inp: {"d^c_b": max(inp["d^c_pre"])},
+            "c_join": lambda inp: {
+                "d^c_join": inp["d^c_a"] * inp["d^c_b"]
+            },
+            "c_out": lambda inp: {},
+        }
+
+    plan = swirl.trace(edges, mapping=mapping).optimize()
+    clean = (
+        plan.lower("multiprocess", timeout_s=60)
+        .compile(steps())
+        .run()
+        .data
+    )
+    n = 8
+
+    def fold_expect(ren):
+        out: dict = {}
+        for l, d in clean.items():
+            out.setdefault(ren.get(l, l), {}).update(d)
+        return out
+
+    # Fault-free baseline throughput.
+    exe = plan.lower("multiprocess", timeout_s=60).compile(steps())
+    dt, results = _t(lambda: exe.run_many([None] * n), repeat=1)
+    assert all(r.data == clean for r in results)
+    baseline_ips = n / dt
+    row(
+        "chaos/baseline_ips", f"{baseline_ips:.1f}", "instances/s",
+        f"{n} instances, 3 worker processes, no faults",
+    )
+
+    # Sustained kills, spare replacement: every instance loses the
+    # c_join worker to SIGKILL and is renamed onto a spare location.
+    mismatches, recoveries = 0, 0
+    for mode, lower_opts in [
+        ("spare", dict(recover="spare", spares=["hot0"])),
+        ("fold", dict(recover="fold")),
+    ]:
+        exe = plan.lower(
+            "multiprocess",
+            timeout_s=120,
+            _kill_at_step="c_join",
+            **lower_opts,
+        ).compile(steps())
+        dt, results = _t(lambda: exe.run_many([None] * n), repeat=1)
+        for r in results:
+            recs = r.stats["recoveries"]
+            recoveries += len(recs)
+            ren = recs[0]["renaming"] if recs else {}
+            if r.data != fold_expect(ren):
+                mismatches += 1
+        ips = n / dt
+        row(
+            f"chaos/{mode}_ips", f"{ips:.1f}", "instances/s",
+            f"{n} instances, 1 SIGKILL each, "
+            f"{ips / baseline_ips * 100:.0f}% of fault-free",
+        )
+    row(
+        "chaos/recoveries", recoveries, "events",
+        f"expected {2 * n} (one per killed instance)",
+    )
+    row(
+        "chaos/result_mismatches", mismatches, "instances",
+        "recovered data vs clean run modulo renaming (must be 0)",
+    )
+    assert mismatches == 0
+    assert recoveries == 2 * n
+
+
 def bench_bisim() -> None:
     from repro.core import encode, rewrite_system, weak_barbed_bisimilar
     from repro.core.semantics import reachable_states
@@ -786,6 +894,7 @@ SECTIONS = {
     "serve": bench_serve,
     "obs": bench_obs,
     "gateway": bench_gateway,
+    "chaos": bench_chaos,
     "bisim": bench_bisim,
     "kernels": bench_kernels,
     "train": bench_train,

@@ -58,6 +58,7 @@ import threading
 import time
 import warnings
 from dataclasses import replace
+from types import SimpleNamespace
 from typing import Any, Mapping, Sequence
 
 from repro.core.compile import StepMeta
@@ -378,7 +379,9 @@ class MultiprocessProgram(BackendProgram):
     _store = None  # merged (location, datum) -> payload
     _completed = None  # set of completed step names
     _pending_ckpt = None
-    last_pids = {}  # worker id -> OS pid of the last run (never mutated)
+    #: ``(attempt, worker id) -> OS pid`` across every fleet the last run
+    #: spawned (one entry per worker per recovery attempt; never mutated).
+    last_pids = {}
     #: RunProfile of the last traced run — set even when the run raised
     #: (e.g. a SIGKILLed worker), holding every span merged before the
     #: failure.  ``None`` when the last run was untraced.
@@ -400,9 +403,7 @@ class MultiprocessProgram(BackendProgram):
     def run(
         self, initial_payloads: Mapping[PayloadKey, Any] | None = None
     ) -> ExecutionResult:
-        from multiprocessing import connection as mpc
-
-        from repro.workflow.transport import get_transport, socket_addresses
+        from repro.workflow.transport import get_transport
 
         opts = dict(self.options)
         schedule = opts.pop("schedule", None)
@@ -413,6 +414,13 @@ class MultiprocessProgram(BackendProgram):
         ack_timeout = float(opts.pop("ack_timeout", 1.0))
         kill_at = opts.pop("_kill_at_step", None)
         tracing = bool(opts.pop("trace", False))
+        recover = str(opts.pop("recover", "off"))
+        if recover not in ("off", "spare", "fold"):
+            raise ValueError(
+                f'recover must be "off", "spare" or "fold", got {recover!r}'
+            )
+        spares = list(opts.pop("spares", ()) or ())
+        max_recoveries = int(opts.pop("max_recoveries", 8))
         recorder = None
         offsets: dict[int, float] = {}  # wid -> additive clock shift
         if tracing:
@@ -447,14 +455,188 @@ class MultiprocessProgram(BackendProgram):
             store.update(initial_payloads)
         self._store, self._completed = store, completed
 
-        groups = assign_workers(
-            self.program, workers=workers, schedule=schedule
-        )
         ctx = mp.get_context(start_method)
-        tmpdir = tempfile.mkdtemp(prefix="swirl-mp-")
-        addresses = socket_addresses(
-            self.program.locations(), base_dir=tmpdir
+        program = self.program
+        recoveries: list[dict] = []
+        all_pids: dict[tuple[int, int], int] = {}
+        fatal: tuple | None = None
+        attempt = 0
+        while True:
+            groups = assign_workers(
+                program,
+                workers=workers,
+                # A stale schedule speaks pre-rename location names; its
+                # network pinning only applies to the fleet it planned.
+                schedule=schedule if attempt == 0 else None,
+            )
+            failure, finals, pids = self._attempt(
+                program,
+                store,
+                completed,
+                recorded,
+                groups=groups,
+                ctx=ctx,
+                transport_name=transport_name,
+                timeout_s=timeout_s,
+                ack_timeout=ack_timeout,
+                kill_at=kill_at,
+                tracing=tracing,
+                recorder=recorder,
+                offsets=offsets,
+            )
+            for wid, pid in pids.items():
+                all_pids[(attempt, wid)] = pid
+            self.last_pids = dict(all_pids)
+            if failure is None:
+                break
+            # Only process *death* is recoverable — a deterministic step
+            # exception ("error") would just re-raise on the replacement,
+            # and a timeout already tore the whole fleet down.
+            if (
+                failure[0] != "crash"
+                or recover == "off"
+                or len(recoveries) >= max_recoveries
+            ):
+                fatal = failure
+                break
+            t0 = time.monotonic()
+            wid = failure[1]
+            dead = sorted(groups[wid])
+            live = [
+                l for l in program.locations() if l not in set(dead)
+            ]
+            from repro.exec.elastic import rename_program, resimulate
+            from repro.workflow.elastic import fold_payloads, plan_recovery
+
+            try:
+                ren = plan_recovery(
+                    live, dead, spares if recover == "spare" else []
+                )
+            except RuntimeError:
+                fatal = failure  # nothing to recover onto
+                break
+            spares = [s for s in spares if s not in set(ren.values())]
+            program = rename_program(program, ren)
+            store = fold_payloads(store, ren)
+            # The resume point: everything the coordinator merged before
+            # the crash, folded under the substitution.  Completed steps
+            # replay these recorded outputs — their bodies never re-run.
+            resume = SimpleNamespace(
+                payloads=store, completed_execs=frozenset(completed)
+            )
+            recorded = _recorded_outputs(program, resume)
+            self._store = store
+            kill_at = None  # the injected fault fires once
+            event = {
+                "attempt": len(recoveries) + 1,
+                "mode": recover,
+                "worker_id": wid,
+                "failed_step": failure[3],
+                "dead": list(dead),
+                "renaming": dict(ren),
+                "completed_steps": len(completed),
+            }
+            if schedule is not None:
+                try:
+                    event["predicted_makespan_s"] = resimulate(
+                        program
+                    ).makespan
+                except Exception:  # noqa: BLE001 - prediction is best-effort
+                    pass
+            recoveries.append(event)
+            if recorder is not None:
+                t1 = time.monotonic()
+                for d in dead:
+                    recorder.span(
+                        "phase",
+                        ren[d],
+                        f"recover:{recover}",
+                        t0,
+                        t1,
+                        src=d,
+                        dst=ren[d],
+                    )
+            attempt += 1
+
+        profile = None
+        if recorder is not None:
+            from repro.obs.profile import RunProfile
+
+            profile = RunProfile.from_recorder("multiprocess", recorder)
+            # Survives even a failed run: everything merged before the
+            # worker died is inspectable post-mortem.
+            self.last_profile = profile
+
+        if fatal is not None:
+            if fatal[0] == "timeout":
+                raise TimeoutError(
+                    f"multiprocess run exceeded {timeout_s}s; "
+                    "workers terminated"
+                )
+            kind, wid, loc, step, info = fatal
+            raise WorkerFailedError(
+                loc,
+                step,
+                worker_id=wid,
+                exitcode=info if kind == "crash" else None,
+                reason=info if kind == "error" else "",
+            )
+
+        data: dict[str, dict[str, Any]] = {
+            loc: {} for loc in program.locations()
+        }
+        for wid in sorted(finals):
+            for loc, local in finals[wid].items():
+                data[loc].update(local)
+                for d, v in local.items():
+                    store[(loc, d)] = v
+        return ExecutionResult(
+            backend="multiprocess",
+            data=data,
+            stats={
+                "workers": len(groups),
+                "groups": {i: list(g) for i, g in enumerate(groups)},
+                "pids": dict(pids),
+                "transport": transport_name,
+                "start_method": start_method,
+                "recoveries": recoveries,
+            },
+            profile=profile,
         )
+
+    def _attempt(
+        self,
+        program: ExecProgram,
+        store: dict[PayloadKey, Any],
+        completed: set[str],
+        recorded: Mapping[str, dict],
+        *,
+        groups: list[tuple[str, ...]],
+        ctx,
+        transport_name: str,
+        timeout_s: float,
+        ack_timeout: float,
+        kill_at: str | None,
+        tracing: bool,
+        recorder,
+        offsets: dict[int, float],
+    ) -> tuple[tuple | None, dict, dict[int, int]]:
+        """Spawn one worker fleet for ``program`` and drive it to done/fail.
+
+        Each attempt binds a *fresh* set of transport endpoints (its own
+        socket directory + authkey) — after a recovery renaming this is
+        what rebinds the renamed locations' channels; ``HybridTransport``
+        pinning for co-resident groups happens inside the workers.
+        Mutates ``store``/``completed`` in place as deltas arrive (the
+        coordinator-merged checkpoint the recovery path resumes from) and
+        returns ``(failure, finals, pids)`` with every worker torn down.
+        """
+        from multiprocessing import connection as mpc
+
+        from repro.workflow.transport import socket_addresses
+
+        tmpdir = tempfile.mkdtemp(prefix="swirl-mp-")
+        addresses = socket_addresses(program.locations(), base_dir=tmpdir)
         authkey = os.urandom(16)
 
         procs: list = []
@@ -529,9 +711,7 @@ class MultiprocessProgram(BackendProgram):
                 cfg = dict(
                     worker_id=wid,
                     locations=group,
-                    programs={
-                        loc: self.program[loc] for loc in group
-                    },
+                    programs={loc: program[loc] for loc in group},
                     steps=dict(self.steps),
                     addresses=addresses,
                     authkey=authkey,
@@ -630,52 +810,7 @@ class MultiprocessProgram(BackendProgram):
                 except OSError:
                     pass
             shutil.rmtree(tmpdir, ignore_errors=True)
-            self.last_pids = dict(pids)
-
-        profile = None
-        if recorder is not None:
-            from repro.obs.profile import RunProfile
-
-            profile = RunProfile.from_recorder("multiprocess", recorder)
-            # Survives even a failed run: everything merged before the
-            # worker died is inspectable post-mortem.
-            self.last_profile = profile
-
-        if failure is not None:
-            if failure[0] == "timeout":
-                raise TimeoutError(
-                    f"multiprocess run exceeded {timeout_s}s; "
-                    "workers terminated"
-                )
-            kind, wid, loc, step, info = failure
-            raise WorkerFailedError(
-                loc,
-                step,
-                worker_id=wid,
-                exitcode=info if kind == "crash" else None,
-                reason=info if kind == "error" else "",
-            )
-
-        data: dict[str, dict[str, Any]] = {
-            loc: {} for loc in self.program.locations()
-        }
-        for wid in sorted(finals):
-            for loc, local in finals[wid].items():
-                data[loc].update(local)
-                for d, v in local.items():
-                    store[(loc, d)] = v
-        return ExecutionResult(
-            backend="multiprocess",
-            data=data,
-            stats={
-                "workers": len(groups),
-                "groups": {i: list(g) for i, g in enumerate(groups)},
-                "pids": dict(pids),
-                "transport": transport_name,
-                "start_method": start_method,
-            },
-            profile=profile,
-        )
+        return failure, finals, pids
 
     # -- checkpoint capability ----------------------------------------------
 
@@ -696,7 +831,7 @@ class MultiprocessProgram(BackendProgram):
 class MultiprocessBackend(Backend):
     name = "multiprocess"
     capabilities = frozenset(
-        {"checkpoint", "distributed", "fault-injection"}
+        {"checkpoint", "distributed", "fault-injection", "elastic-recovery"}
     )
 
     def known_options(self) -> frozenset[str]:
@@ -708,6 +843,9 @@ class MultiprocessBackend(Backend):
                 "timeout_s",
                 "ack_timeout",
                 "_kill_at_step",
+                "recover",
+                "spares",
+                "max_recoveries",
             }
         )
 

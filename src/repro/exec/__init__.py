@@ -33,6 +33,7 @@ from .program import (
 )
 from .interp import Cursor
 from .emit import emit_location_source, emit_program_sources
+from .elastic import rename_program, resimulate
 
 __all__ = [
     "ExecOp",
@@ -47,4 +48,6 @@ __all__ = [
     "Cursor",
     "emit_location_source",
     "emit_program_sources",
+    "rename_program",
+    "resimulate",
 ]

@@ -141,6 +141,12 @@ class AdmissionController:
             raise ValueError("admission needs at least one tenant")
         self._draining = False
         self._drain_lock = threading.Lock()
+        #: Signalled whenever admitted work shrinks (a slot released or a
+        #: queued ticket abandoned) — what :meth:`drain` sleeps on.  Never
+        #: held together with a tenant lock from the notifying side; the
+        #: waiting side acquires tenant locks only *inside* it, so the lock
+        #: order is always ``_idle`` → ``st.lock``.
+        self._idle = threading.Condition()
 
     # -- identity ------------------------------------------------------------
     def authenticate(self, api_key: str) -> TenantConfig:
@@ -202,9 +208,12 @@ class AdmissionController:
                 return
             st.queue.remove(ticket)
             st.rejected += 1
-            raise AdmissionRejected(
+            rejection = AdmissionRejected(
                 tenant, retry_after=self._retry_after(st), reason="timeout"
             )
+        with self._idle:
+            self._idle.notify_all()  # the abandoned ticket shrank the queue
+        raise rejection
 
     def release(self, tenant: str, *, run_seconds: float = 0.0) -> None:
         """Return a slot; the longest-waiting queued request gets it."""
@@ -224,6 +233,8 @@ class AdmissionController:
                 st.active += 1
                 st.admitted += 1
                 ticket.event.set()
+        with self._idle:
+            self._idle.notify_all()  # admitted work shrank (or handed over)
 
     @contextmanager
     def admit(
@@ -248,16 +259,27 @@ class AdmissionController:
         with self._drain_lock:
             self._draining = True
         deadline = time.monotonic() + timeout_s
-        while time.monotonic() < deadline:
-            if all(
-                st.active == 0 and not st.queue
-                for st in self._tenants.values()
-            ):
-                return True
-            time.sleep(0.01)
-        return all(
-            st.active == 0 and not st.queue for st in self._tenants.values()
-        )
+        # Event-driven rather than a 10ms busy-poll: `release`/the queue-
+        # timeout path notify `_idle` whenever admitted work shrinks, and
+        # every tenant read below happens under that tenant's lock (the
+        # same discipline as `queue_depths`).  Holding `_idle` across the
+        # predicate check closes the check-then-wait race: a notify cannot
+        # slip between seeing work outstanding and going to sleep.
+        with self._idle:
+            while not self._all_idle():
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return self._all_idle()
+                self._idle.wait(remaining)
+        return True
+
+    def _all_idle(self) -> bool:
+        """Locked read: no tenant has active or queued admitted work."""
+        for st in self._tenants.values():
+            with st.lock:
+                if st.active or st.queue:
+                    return False
+        return True
 
     # -- introspection ---------------------------------------------------------
     def queue_depths(self) -> dict[str, dict[str, int]]:

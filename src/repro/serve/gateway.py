@@ -33,10 +33,13 @@ them with a scrape-time snapshot of ``WorkflowService.stats()``
 Error contract: every failure is a JSON body ``{"error": {...}}`` — never
 a traceback.  ``400`` malformed submission (typed, with line/column for
 ``.swirl`` syntax errors), ``401`` unknown API key, ``404`` unknown
-fingerprint, ``429`` quota exhausted (with ``Retry-After``), ``503``
-draining.  HTTP/1.1 with correct ``Content-Length``, so client
-connections stay alive across requests (which is what makes cache-hit
-serving fast enough to benchmark).
+fingerprint, ``413`` request body over the gateway's ``max_body_bytes``
+(typed ``BodyTooLarge`` with the limit and the declared length; the body
+is rejected *unread*, so the response also closes the connection), ``429``
+quota exhausted (with ``Retry-After``), ``503`` draining.  HTTP/1.1 with
+correct ``Content-Length``, so client connections stay alive across
+requests (which is what makes cache-hit serving fast enough to
+benchmark).
 
 The server itself is deliberately boring: one thread per connection
 (``ThreadingHTTPServer``), all real behaviour lives in
@@ -69,12 +72,36 @@ from repro.serve.service import (
 )
 from repro.serve.submission import SubmissionError
 
-__all__ = ["Gateway"]
+__all__ = ["BodyTooLarge", "DEFAULT_MAX_BODY_BYTES", "Gateway"]
 
 logger = logging.getLogger("repro.serve.gateway")
 
-#: Submissions and payloads beyond this are rejected before reading (413).
-MAX_BODY_BYTES = 64 * 1024 * 1024
+#: Default request-body cap.  Submissions and payloads whose declared
+#: ``Content-Length`` exceeds the gateway's ``max_body_bytes`` are
+#: rejected with a 413 *before a single body byte is read* — the cap runs
+#: ahead of auth and admission, so an oversized request can never buffer
+#: unbounded memory.  Per-gateway override via ``Gateway(max_body_bytes=…)``.
+DEFAULT_MAX_BODY_BYTES = 8 * 1024 * 1024
+
+
+class BodyTooLarge(ValueError):
+    """A request body over the gateway's cap — mapped to HTTP 413."""
+
+    def __init__(self, content_length: int, limit: int):
+        super().__init__(
+            f"request body of {content_length} bytes exceeds the gateway's "
+            f"{limit}-byte limit"
+        )
+        self.content_length = content_length
+        self.limit = limit
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "type": "BodyTooLarge",
+            "message": str(self),
+            "limit_bytes": self.limit,
+            "content_length": self.content_length,
+        }
 
 _ROUTES = {
     ("POST", re.compile(r"/v1/workflows\Z")): "submit",
@@ -173,12 +200,9 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _read_body(self) -> Any:
         length = int(self.headers.get("Content-Length") or 0)
-        if length > MAX_BODY_BYTES:
-            raise SubmissionError(
-                f"body of {length} bytes exceeds the {MAX_BODY_BYTES}-byte "
-                "limit",
-                kind="json",
-            )
+        limit = self.gateway.max_body_bytes
+        if length > limit:
+            raise BodyTooLarge(length, limit)
         raw = self.rfile.read(length) if length else b""
         ctype = (self.headers.get("Content-Type") or "").split(";")[0].strip()
         if ctype in ("text/plain", "application/x-swirl"):
@@ -318,6 +342,11 @@ class _Handler(BaseHTTPRequestHandler):
                 )
             elif name == "stats":
                 self._reply(200, service.stats())
+        except BodyTooLarge as e:
+            # The oversized body was never read off the socket, so the
+            # connection cannot be reused for a next request — close it.
+            self.close_connection = True
+            self._error(413, e.to_json(), headers={"Connection": "close"})
         except SubmissionError as e:
             self._error(400, e.to_json())
         except UnknownWorkflowError as e:
@@ -388,7 +417,13 @@ class Gateway:
         *,
         host: str = "127.0.0.1",
         port: int = 0,
+        max_body_bytes: int = DEFAULT_MAX_BODY_BYTES,
     ):
+        if max_body_bytes < 1:
+            raise ValueError(
+                f"max_body_bytes must be >= 1, got {max_body_bytes}"
+            )
+        self.max_body_bytes = max_body_bytes
         self.service = service
         self.metrics = MetricsRegistry()
         self._requests = self.metrics.counter(

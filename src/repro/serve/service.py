@@ -59,6 +59,14 @@ def _trace_tag() -> str:
 
     return current_trace_id.get() or "-"
 
+
+def _recoveries_of(result: Any) -> int:
+    """Elastic recoveries a backend reported for one instance (0 if none)."""
+    stats = getattr(result, "stats", None)
+    if isinstance(stats, Mapping):
+        return len(stats.get("recoveries") or ())
+    return 0
+
 #: The open single-tenant default: embedding apps and quickstarts that do
 #: not care about multi-tenancy authenticate with an empty API key.
 DEFAULT_TENANTS = (
@@ -134,6 +142,7 @@ class WorkflowService:
             "instances_completed": 0,
             "instances_failed": 0,
             "rejected": 0,
+            "recoveries": 0,
         }
 
     def _count(self, **deltas: int) -> None:
@@ -250,7 +259,9 @@ class WorkflowService:
                     _trace_tag(),
                 )
                 raise
-        self._count(instances_completed=1)
+        self._count(
+            instances_completed=1, recoveries=_recoveries_of(result)
+        )
         return {"fingerprint": fingerprint, "data": result.data}
 
     def run_many(
@@ -289,7 +300,10 @@ class WorkflowService:
             except Exception:
                 self._count(instances_failed=len(payloads))
                 raise
-        self._count(instances_completed=len(results))
+        self._count(
+            instances_completed=len(results),
+            recoveries=sum(_recoveries_of(r) for r in results),
+        )
         return {
             "fingerprint": fingerprint,
             "results": [{"data": r.data} for r in results],

@@ -36,6 +36,7 @@ from .fault import (
 from .runtime import Checkpoint, Runtime, RunStats, WorkflowDeadlock
 from .threaded import ThreadedProgramRuntime, ThreadedRuntime
 from .elastic import (
+    fold_payloads,
     plan_recovery,
     rebalance,
     recover_checkpoint,
@@ -67,6 +68,7 @@ __all__ = [
     "FlakyFn",
     "SlowFn",
     "rename_locations",
+    "fold_payloads",
     "recover_checkpoint",
     "plan_recovery",
     "rebalance",

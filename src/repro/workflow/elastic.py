@@ -80,17 +80,35 @@ def rename_locations(w: WorkflowSystem, ren: Mapping[str, str]) -> WorkflowSyste
     return WorkflowSystem(tuple(merged[k] for k in sorted(merged)))
 
 
+def fold_payloads(
+    payloads: Mapping[tuple[str, str], object], ren: Mapping[str, str]
+) -> dict[tuple[str, str], object]:
+    """Move payloads under a location substitution, deterministically.
+
+    A fold can collapse two holders of the same datum onto one key.  The
+    precedence is fixed: a *survivor's* payload (a location not being
+    renamed away) always beats one inherited from a renamed (dead)
+    location, and between two renamed locations the lexicographically
+    smallest source wins — never dict-iteration order.
+    """
+    folded: dict[tuple[str, str], object] = {}
+    for l, d in sorted(payloads):
+        v = payloads[(l, d)]
+        if l in ren:
+            folded.setdefault((ren[l], d), v)
+        else:
+            folded[(l, d)] = v
+    return folded
+
+
 def recover_checkpoint(
     ckpt: Checkpoint, ren: Mapping[str, str]
 ) -> Checkpoint:
     """Produce the post-recovery checkpoint under a location substitution."""
     system = rename_locations(ckpt.system, ren)
-    payloads = {}
-    for (l, d), v in ckpt.payloads.items():
-        payloads[(ren.get(l, l), d)] = v
     return Checkpoint(
         system_text=dumps(system),
-        payloads=payloads,
+        payloads=fold_payloads(ckpt.payloads, ren),
         completed_execs=ckpt.completed_execs,
     )
 
@@ -102,11 +120,15 @@ def plan_recovery(
     live locations round-robin (scale-down)."""
     ren: dict[str, str] = {}
     pool = list(spares)
-    for i, d in enumerate(sorted(dead)):
+    live_sorted = sorted(live)
+    folded = 0  # counts fold assignments only, so the round-robin starts
+    # at live_sorted[0] regardless of how many deads took spares first.
+    for d in sorted(dead):
         if pool:
             ren[d] = pool.pop(0)
-        elif live:
-            ren[d] = sorted(live)[i % len(live)]
+        elif live_sorted:
+            ren[d] = live_sorted[folded % len(live_sorted)]
+            folded += 1
         else:
             raise RuntimeError("no live locations or spares to recover onto")
     return ren

@@ -1,12 +1,36 @@
-"""Elasticity: renaming invariance, recovery, rebalance."""
+"""Elasticity: renaming invariance, recovery, rebalance.
+
+Two layers are covered, and checked against each other:
+
+* the *tree* layer (:mod:`repro.workflow.elastic`) — rename the
+  checkpointed term, re-encode, resume — kept as the semantics oracle;
+* the *exec-IR* layer (:mod:`repro.exec.elastic`) — the same substitution
+  applied directly to the lowered op arrays, which is what the live
+  multiprocess recovery path uses.
+
+``rename_program(lower(w), ren).system`` must agree with
+``rename_locations(w, ren)`` exactly (on spatial-free instances — a fold
+that collapses a spatial step diverges deliberately, by dropping the
+now-redundant synchronised copies), and the renamed program must *execute*
+to the clean run's data modulo the renaming.
+"""
 
 import random
 
+import pytest
+
+from repro import swirl
+from repro.backends import get_backend
 from repro.core import encode, optimize, run
+from repro.core.compile import StepMeta
+from repro.core.parser import dumps
+from repro.core.randgen import random_layered_instance
 from repro.core.translate import genomes_1000
+from repro.exec import lower_system, rename_program
 from repro.workflow import (
     Checkpoint,
     Runtime,
+    fold_payloads,
     plan_recovery,
     rebalance,
     recover_checkpoint,
@@ -73,6 +97,175 @@ def test_plan_recovery_folds_without_spares():
     ren = plan_recovery(live=["a", "b"], dead=["x", "y", "z"], spares=["s1"])
     assert ren["x"] == "s1"
     assert set(ren.values()) <= {"s1", "a", "b"}
+
+
+def test_plan_recovery_round_robin_starts_at_first_live():
+    # Regression: the fold round-robin used to be indexed by the *overall*
+    # dead position, so deads that consumed spares skewed every later fold
+    # assignment.  It must index from the first *folded* entry.
+    ren = plan_recovery(live=["a", "b"], dead=["x", "y"], spares=["s1"])
+    assert ren == {"x": "s1", "y": "a"}
+
+
+def test_plan_recovery_fold_balances_after_spare_exhaustion():
+    ren = plan_recovery(
+        live=["a", "b"], dead=["v", "w", "x", "y", "z"], spares=["s1"]
+    )
+    assert ren == {"v": "s1", "w": "a", "x": "b", "y": "a", "z": "b"}
+
+
+def test_plan_recovery_without_any_target_raises():
+    with pytest.raises(RuntimeError):
+        plan_recovery(live=[], dead=["x"], spares=[])
+
+
+def test_fold_payloads_survivor_beats_dead_and_dead_ties_break_low():
+    # Regression: the fold used to keep whichever payload dict iteration
+    # visited last.  The precedence is fixed: a survivor's copy of a datum
+    # always wins over one inherited from a renamed (dead) location, and
+    # between dead sources the lexicographically smallest wins.
+    ren = {"dead_a": "live", "dead_b": "live"}
+    folded = fold_payloads(
+        {
+            ("dead_b", "d"): "from_b",
+            ("live", "d"): "mine",
+            ("dead_a", "d"): "from_a",
+            ("dead_b", "e"): "only_b",
+        },
+        ren,
+    )
+    assert folded == {("live", "d"): "mine", ("live", "e"): "only_b"}
+    no_survivor = fold_payloads(
+        {("dead_b", "d"): "from_b", ("dead_a", "d"): "from_a"}, ren
+    )
+    assert no_survivor == {("live", "d"): "from_a"}
+
+
+def test_recover_checkpoint_folds_payloads_deterministically():
+    inst, w, fns, init = _setup()
+    ckpt = Checkpoint(
+        system_text=dumps(w),
+        payloads={
+            ("l^MO_1", "d^x"): "from_mo1",
+            ("l^MO_2", "d^x"): "from_mo2",
+            ("l^F_1", "d^x"): "survivor",
+        },
+        completed_execs=frozenset({"sIM"}),
+    )
+    ckpt2 = recover_checkpoint(
+        ckpt, {"l^MO_1": "l^F_1", "l^MO_2": "l^F_1"}
+    )
+    assert ckpt2.payloads == {("l^F_1", "d^x"): "survivor"}
+    assert ckpt2.completed_execs == frozenset({"sIM"})
+    assert "l^MO_1" not in ckpt2.system.locations()
+
+
+def test_recover_checkpoint_round_trips_through_disk(tmp_path):
+    inst, w, fns, init = _setup()
+    path = tmp_path / "wf.ckpt"
+    rt = Runtime(w, fns, initial_payloads=init, checkpoint_every=3,
+                 checkpoint_path=path)
+    rt.run()
+    ckpt2 = recover_checkpoint(Checkpoint.load(path), {"l^MO_1": "l^spare"})
+    out = tmp_path / "recovered.ckpt"
+    ckpt2.save(out)
+    loaded = Checkpoint.load(out)
+    assert loaded.payloads == ckpt2.payloads
+    assert loaded.completed_execs == ckpt2.completed_execs
+    assert loaded.system == ckpt2.system
+    assert "l^spare" in loaded.system.locations()
+
+
+# ---------------------------------------------------------------------------
+# Exec-IR renaming (repro.exec.elastic) vs the tree oracle
+# ---------------------------------------------------------------------------
+
+
+def _random_plan(seed, n_steps=12, p_spatial=0.0):
+    inst = random_layered_instance(
+        n_steps, n_locations=4, seed=seed, p_spatial=p_spatial
+    )
+    return inst, swirl.trace(inst).optimize()
+
+
+def test_rename_program_bijective_matches_tree_oracle():
+    for seed in range(10):
+        inst, plan = _random_plan(seed)
+        w = plan.system
+        locs = sorted(w.locations())
+        ren = {l: f"spare{i}" for i, l in enumerate(locs[:2])}
+        arrays = rename_program(lower_system(w), ren).system
+        tree = rename_locations(w, ren)
+        assert arrays == tree, f"seed {seed} diverged from the oracle"
+
+
+def test_rename_program_surjective_matches_tree_oracle():
+    for seed in range(10):
+        inst, plan = _random_plan(seed)
+        w = plan.system
+        locs = sorted(w.locations())
+        if len(locs) < 2:
+            continue
+        # Fold the two smallest locations onto the largest (scale-down).
+        ren = {l: locs[-1] for l in locs[:2]}
+        arrays = rename_program(lower_system(w), ren).system
+        tree = rename_locations(w, ren)
+        assert arrays == tree, f"seed {seed} diverged from the oracle"
+
+
+def _run_renamed(plan, fns, ren):
+    """Execute the renamed op arrays directly through a backend."""
+    renamed = rename_program(lower_system(plan.system), ren)
+    metas = {s: StepMeta(fn=fn) for s, fn in fns.items()}
+    exe = get_backend("threaded").compile(renamed, metas, {"timeout_s": 60})
+    return exe.run().data
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_renamed_program_executes_equivalently_bijective(seed):
+    inst, plan = _random_plan(seed, n_steps=10)
+    fns = identity_step_fns(inst)
+    clean = plan.lower("threaded", timeout_s=60).compile(fns).run().data
+    locs = sorted(plan.system.locations())
+    ren = {locs[0]: "spare0"}
+    data = _run_renamed(plan, fns, ren)
+    assert data == {ren.get(l, l): d for l, d in clean.items()}
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_folded_program_executes_equivalently(seed):
+    inst, plan = _random_plan(seed, n_steps=10)
+    fns = identity_step_fns(inst)
+    clean = plan.lower("threaded", timeout_s=60).compile(fns).run().data
+    locs = sorted(plan.system.locations())
+    if len(locs) < 2:
+        pytest.skip("optimised plan collapsed to one location")
+    ren = {locs[0]: locs[-1]}
+    data = _run_renamed(plan, fns, ren)
+    expected: dict = {}
+    for l, d in clean.items():
+        expected.setdefault(ren.get(l, l), {}).update(d)
+    assert data == expected
+
+
+def test_folded_spatial_step_executes_once_per_location_set():
+    # A fold that collapses both members of a spatial M(s) onto one name
+    # deliberately diverges from the tree oracle: the synchronised copies
+    # become redundant and all but the first are dropped.  The executed
+    # *data* must still match the clean run.
+    for seed in range(6):
+        inst, plan = _random_plan(seed, n_steps=10, p_spatial=0.5)
+        fns = identity_step_fns(inst)
+        clean = plan.lower("threaded", timeout_s=60).compile(fns).run().data
+        locs = sorted(plan.system.locations())
+        if len(locs) < 2:
+            continue
+        ren = {locs[0]: locs[1]}
+        data = _run_renamed(plan, fns, ren)
+        expected: dict = {}
+        for l, d in clean.items():
+            expected.setdefault(ren.get(l, l), {}).update(d)
+        assert data == expected, f"seed {seed} diverged after spatial fold"
 
 
 def test_rebalance_reencodes():

@@ -459,6 +459,33 @@ class TestGatewayHTTP:
             )
         assert exc.value.status == 400
 
+    def test_oversized_body_is_typed_413(self, service):
+        # Regression: the cap used to be an unconfigurable 64 MB module
+        # constant surfaced as a 400 "json" SubmissionError.  It is now a
+        # per-gateway option with its own typed error and status.
+        with Gateway(service, max_body_bytes=1024) as gw:
+            big = json.dumps({"swirl": "x" * 4096}).encode()
+            with GatewayClient(gw.url) as c:
+                with pytest.raises(GatewayError) as exc:
+                    c._request("POST", "/v1/workflows", big)
+                e = exc.value
+                assert e.status == 413
+                assert e.error["type"] == "BodyTooLarge"
+                assert e.error["limit_bytes"] == 1024
+                assert e.error["content_length"] == len(big)
+                assert "Traceback" not in json.dumps(e.payload)
+            # The oversized request was rejected unread and its connection
+            # closed; the gateway keeps serving fresh connections.
+            with GatewayClient(gw.url) as c2:
+                assert len(c2.submit(DAG_BODY)["fingerprint"]) == 64
+
+    def test_body_cap_defaults_to_a_few_mb(self, service):
+        from repro.serve.gateway import DEFAULT_MAX_BODY_BYTES
+
+        with Gateway(service) as gw:
+            assert gw.max_body_bytes == DEFAULT_MAX_BODY_BYTES
+            assert 1024 * 1024 <= DEFAULT_MAX_BODY_BYTES <= 64 * 1024 * 1024
+
     def test_healthz_unauthenticated(self, gateway):
         with GatewayClient(gateway.url, api_key="not-a-key") as c:
             health = c.healthz()
@@ -541,14 +568,22 @@ class TestOverloadAndDrain:
         return Gateway(svc).start()
 
     def test_429_with_retry_after(self):
-        gw = self._gateway(
-            sleep_s=0.15,
+        # Deterministic overload: ``prep`` blocks on an event, so the 2
+        # in-flight + 2 queued runs cannot drain a slot early — the other
+        # 6 must hit queue-full no matter how the threads are scheduled.
+        release = threading.Event()
+        steps = step_registry()
+        sleepy_prep = steps["prep"]
+        steps["prep"] = lambda inp: (release.wait(30), sleepy_prep(inp))[1]
+        svc = WorkflowService(
+            steps,
             tenants=[
                 TenantConfig(
                     "t1", api_key="k1", max_concurrent=2, max_queue=2
                 )
             ],
         )
+        gw = Gateway(svc).start()
         try:
             with GatewayClient(gw.url, api_key="k1") as c0:
                 fp = c0.submit(DAG_BODY)["fingerprint"]
@@ -573,6 +608,13 @@ class TestOverloadAndDrain:
             ]
             for t in threads:
                 t.start()
+            deadline = time.monotonic() + 20
+            while time.monotonic() < deadline:
+                with lock:
+                    if outcomes["429"] == 6:
+                        break
+                time.sleep(0.01)
+            release.set()
             for t in threads:
                 t.join(30)
             # 2 in flight + 2 queued succeed; the rest are shed — and

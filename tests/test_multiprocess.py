@@ -319,3 +319,153 @@ class TestWorkerFailure:
             .run()
         )
         assert restored.data == done.data
+
+
+# ---------------------------------------------------------------------------
+# Elastic recovery: SIGKILLed workers are renamed onto spares / folded onto
+# survivors mid-run, without re-executing checkpointed steps
+# ---------------------------------------------------------------------------
+
+
+def _logged_steps(log):
+    """Step bodies that append their name to ``log`` on every *execution*
+    (a replayed recorded output writes nothing)."""
+    steps = {}
+    for name, fn in quickstart_steps().items():
+
+        def wrapper(inp, _name=name, _fn=fn):
+            with open(log, "a") as f:
+                f.write(f"{_name}\n")
+            return _fn(inp)
+
+        steps[name] = wrapper
+    return steps
+
+
+class TestElasticRecovery:
+    def test_spare_recovery_survives_sigkill(self, plan, tmp_path):
+        log = tmp_path / "execs.log"
+        clean = plan.lower("multiprocess", timeout_s=60).compile(
+            quickstart_steps()
+        ).run()
+        exe = plan.lower(
+            "multiprocess",
+            timeout_s=60,
+            _kill_at_step="evaluate",
+            recover="spare",
+            spares=["spare0"],
+            trace=True,
+        ).compile(_logged_steps(log))
+        result = exe.run()
+
+        recs = result.stats["recoveries"]
+        assert len(recs) == 1
+        rec = recs[0]
+        assert rec["mode"] == "spare"
+        assert rec["failed_step"] == "evaluate"
+        assert rec["dead"] == ["gpu0"]
+        assert rec["renaming"] == {"gpu0": "spare0"}
+        # Same results as the unperturbed run, modulo the renaming.
+        assert result.data == {
+            ("spare0" if l == "gpu0" else l): d for l, d in clean.data.items()
+        }
+        # Checkpointed steps were replayed, never re-executed: every step
+        # body ran exactly once across both fleets (`evaluate` was killed
+        # *before* its body, so its single run is post-recovery).
+        executed = log.read_text().split()
+        assert sorted(executed) == sorted(quickstart_steps())
+        # The recovery is visible as a phase span on the renamed location.
+        spans = [
+            s for s in result.profile.spans if s.name == "recover:spare"
+        ]
+        assert len(spans) == 1
+        assert spans[0].kind == "phase"
+        assert (spans[0].src, spans[0].dst) == ("gpu0", "spare0")
+        _assert_no_workers_left(exe.program)
+
+    def test_fold_recovery_merges_onto_survivor(self, plan, tmp_path):
+        log = tmp_path / "execs.log"
+        clean = plan.lower("multiprocess", timeout_s=60).compile(
+            quickstart_steps()
+        ).run()
+        exe = plan.lower(
+            "multiprocess",
+            timeout_s=60,
+            _kill_at_step="evaluate",
+            recover="fold",
+        ).compile(_logged_steps(log))
+        result = exe.run()
+
+        recs = result.stats["recoveries"]
+        assert len(recs) == 1
+        ren = recs[0]["renaming"]
+        assert recs[0]["mode"] == "fold"
+        assert set(ren) == {"gpu0"}
+        target = ren["gpu0"]
+        assert target in {"cpu0", "gpu1"}
+        expected: dict = {}
+        for l, d in clean.data.items():
+            expected.setdefault(ren.get(l, l), {}).update(d)
+        assert result.data == expected
+        assert sorted(log.read_text().split()) == sorted(quickstart_steps())
+        _assert_no_workers_left(exe.program)
+
+    def test_error_failures_are_never_recovered(self, plan):
+        # A deterministic step exception would just re-raise on the
+        # replacement — only process *death* is recoverable.
+        steps = quickstart_steps()
+        steps["train_b"] = lambda inp: (_ for _ in ()).throw(
+            ValueError("boom")
+        )
+        exe = plan.lower(
+            "multiprocess",
+            timeout_s=60,
+            recover="spare",
+            spares=["spare0"],
+        ).compile(steps)
+        with pytest.raises(WorkerFailedError) as e:
+            exe.run()
+        assert "boom" in e.value.reason
+        _assert_no_workers_left(exe.program)
+
+    def test_recovery_exhausted_spares_raises(self, plan):
+        exe = plan.lower(
+            "multiprocess",
+            timeout_s=60,
+            _kill_at_step="evaluate",
+            recover="spare",
+            spares=[],
+            max_recoveries=0,
+        ).compile(quickstart_steps())
+        with pytest.raises(WorkerFailedError) as e:
+            exe.run()
+        assert e.value.exitcode == -signal.SIGKILL
+        _assert_no_workers_left(exe.program)
+
+    def test_bad_recover_mode_rejected(self, plan):
+        exe = plan.lower(
+            "multiprocess", recover="wishful"
+        ).compile(quickstart_steps())
+        with pytest.raises(ValueError, match="recover must be"):
+            exe.run()
+
+    def test_run_many_batch_keeps_draining_through_kills(self, plan):
+        clean = plan.lower("multiprocess", timeout_s=60).compile(
+            quickstart_steps()
+        ).run()
+        exe = plan.lower(
+            "multiprocess",
+            timeout_s=120,
+            _kill_at_step="evaluate",
+            recover="fold",
+        ).compile(quickstart_steps())
+        results = exe.run_many([None] * 3)
+        assert len(results) == 3
+        for r in results:
+            assert len(r.stats["recoveries"]) == 1
+            ren = r.stats["recoveries"][0]["renaming"]
+            expected: dict = {}
+            for l, d in clean.data.items():
+                expected.setdefault(ren.get(l, l), {}).update(d)
+            assert r.data == expected
+        _assert_no_workers_left(exe.program)
