@@ -26,7 +26,9 @@ Prints ``name,value,unit,derived`` CSV rows.  Sections:
 * ``chaos``     — elastic recovery under chaos: run_many throughput and
   result-correctness on the multiprocess backend while every instance's
   worker is SIGKILLed mid-flight and recovered onto a spare (rename) or a
-  survivor (fold / pool resize);
+  survivor (fold / pool resize); plus straggler mitigation (a delayed
+  worker declared dead by the FaultPolicy heartbeat, spare vs fold vs
+  no-policy makespan) and a whole-run deadline abort;
 * ``bisim``     — LTS sizes + exact bisimulation check time (Thm. 1);
 * ``kernels``   — Pallas kernels (interpret mode) vs jnp references;
 * ``train``     — SWIRL-planned trainer steps/s (smoke config);
@@ -808,6 +810,78 @@ def bench_chaos() -> None:
     )
     assert mismatches == 0
     assert recoveries == 2 * n
+
+    # -- stragglers: a delayed (never killed) c_join worker -------------------
+    # The FaultPolicy progress heartbeat declares the silent worker dead and
+    # elastic recovery reruns its step on a spare (rename) or a survivor
+    # (fold); without a policy the run simply waits out the whole delay.
+    import tempfile
+
+    from repro.exec import FaultPolicy, RunDeadlineExceeded
+    from repro.workflow.fault import SlowOnceAcrossProcesses
+
+    delay_s = 8.0
+    policy = FaultPolicy(heartbeat_interval_s=0.2, heartbeat_timeout_s=1.0)
+    straggler_s: dict[str, float] = {}
+    corrupted = 0
+    with tempfile.TemporaryDirectory() as tmp:
+        for mode, opts in [
+            ("spare", dict(policy=policy, recover="spare", spares=["hot0"])),
+            ("fold", dict(policy=policy, recover="fold")),
+            ("no_policy", {}),
+        ]:
+            fns = steps()
+            fns["c_join"] = SlowOnceAcrossProcesses(
+                fns["c_join"],
+                flag_path=str(Path(tmp) / f"straggle-{mode}"),
+                delay_s=delay_s,
+            )
+            exe = plan.lower(
+                "multiprocess", timeout_s=120, **opts
+            ).compile(fns)
+            dt, res = _t(exe.run, repeat=1)
+            recs = res.stats.get("recoveries") or []
+            ren = recs[0]["renaming"] if recs else {}
+            if res.data != fold_expect(ren):
+                corrupted += 1
+            if mode == "no_policy":
+                detail = f"{delay_s:.0f}s straggler, no fault policy"
+            else:
+                assert len(recs) == 1
+                assert recs[0]["declared_by"] == "heartbeat"
+                detail = (
+                    f"{delay_s:.0f}s straggler declared dead by heartbeat "
+                    f"after {policy.heartbeat_timeout_s:.0f}s silence"
+                )
+            straggler_s[mode] = dt
+            row(f"chaos/straggler_{mode}_s", f"{dt:.2f}", "s", detail)
+    row(
+        "chaos/straggler_corrupted", corrupted, "runs",
+        "straggler-run data vs clean run modulo renaming (must be 0)",
+    )
+    assert corrupted == 0
+    # Recovery must beat sitting out the delay, in both modes.
+    assert straggler_s["spare"] < straggler_s["no_policy"]
+    assert straggler_s["fold"] < straggler_s["no_policy"]
+
+    # -- whole-run deadline: typed abort, promptly ----------------------------
+    slow = steps()
+    slow["c_join"] = lambda inp: (time.sleep(30), {"d^c_join": 0})[1]
+    exe = plan.lower(
+        "threaded", timeout_s=60, policy=FaultPolicy(deadline_s=0.5)
+    ).compile(slow)
+    t0 = time.perf_counter()
+    try:
+        exe.run()
+        aborted = False
+    except RunDeadlineExceeded:
+        aborted = True
+    abort_s = time.perf_counter() - t0
+    row(
+        "chaos/deadline_abort_s", f"{abort_s:.2f}", "s",
+        "0.5s run deadline over a 30s straggling c_join (threaded)",
+    )
+    assert aborted and abort_s < 5.0
 
 
 def bench_bisim() -> None:

@@ -225,5 +225,8 @@ class Backend(ABC):
         # backend; backends may consult it (the jax backend groups rack
         # members onto devices) or ignore it.  "trace" turns on the
         # repro.obs span recorder — every backend understands it and
-        # attaches a RunProfile to its results.
-        return frozenset({"schedule", "trace"})
+        # attaches a RunProfile to its results.  "policy" is the uniform
+        # :class:`repro.exec.policy.FaultPolicy` — every backend honors
+        # retry/timeout/deadline through the shared interp helpers (each
+        # adds the mechanisms its architecture affords on top).
+        return frozenset({"schedule", "trace", "policy"})

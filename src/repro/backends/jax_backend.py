@@ -28,10 +28,13 @@ from repro.core.compile import StepMeta
 from repro.core.syntax import WorkflowSystem
 from repro.exec.interp import (
     Cursor,
+    Deadline,
+    StepGuard,
     enabled_exec_picks,
     first_enabled_comm,
     record_comm_fire,
     record_exec_fire,
+    record_policy_fire,
 )
 from repro.exec.program import ExecProgram
 
@@ -85,6 +88,22 @@ class JaxMeshProgram(BackendProgram):
             "bytes_moved": 0,
             "devices": {l: str(d) for l, d in device_of.items()},
         }
+        # Uniform fault policy: the deterministic reducer guards each step
+        # fire with the shared timeout + retry helper and checks the run
+        # deadline once per reduction round.
+        policy = self.options.get("policy")
+        guard = None
+        deadline = Deadline(None)
+        if policy is not None:
+            guard = StepGuard(
+                policy,
+                on_retry=lambda step, n, e: record_policy_fire(
+                    recorder, "retry", "-", step,
+                    time.monotonic(), time.monotonic(),
+                ),
+            )
+            deadline = Deadline(policy.deadline_s)
+            stats["policy"] = {"retries": 0, "timeouts": 0}
 
         def place(loc: str, value: Any) -> Any:
             if not _is_array(value):
@@ -127,6 +146,7 @@ class JaxMeshProgram(BackendProgram):
 
         max_rounds = int(self.options.get("max_rounds", 1_000_000))
         for _ in range(max_rounds):
+            deadline.check()
             progressed = False
             # Drain communications first (they are τ — silent, confluent).
             while fire_one_comm():
@@ -140,11 +160,17 @@ class JaxMeshProgram(BackendProgram):
                 op, picks = execs[0]
                 leader = min(op.locations)
                 inputs = {d: payloads[(leader, d)] for d in op.inputs}
+                fn = self.steps[op.step].fn
+                fire = (
+                    (lambda: guard.fire(op.step, lambda: fn(inputs)))
+                    if guard is not None
+                    else (lambda: fn(inputs))
+                )
                 if recorder is None:
-                    out = self.steps[op.step].fn(inputs)
+                    out = fire()
                 else:
                     t0 = time.monotonic()
-                    out = self.steps[op.step].fn(inputs)
+                    out = fire()
                     record_exec_fire(recorder, op, t0, time.monotonic())
                 missing = set(op.outputs) - set(out)
                 if missing:
@@ -161,6 +187,8 @@ class JaxMeshProgram(BackendProgram):
             if not progressed:
                 break
 
+        if guard is not None:
+            stats["policy"] = guard.counts()
         if not all(c.finished() for c in cursors.values()):
             remaining = self.program.remaining_system(
                 {l: c.done_flags() for l, c in cursors.items()},

@@ -258,6 +258,25 @@ def _worker_main(cfg: dict) -> None:
             except (OSError, BrokenPipeError, ValueError):
                 pass  # coordinator is gone; nothing left to report to
 
+    # Uniform fault policy: per-step retry + timeout run *inside* the
+    # control-protocol wrapper, around the raw step body — a retried
+    # transient failure must never reach the coordinator as an "error"
+    # (which would tear the fleet down before the retry could succeed).
+    # Each policy outcome is reported upstream so the coordinator can
+    # count it; the messages double as progress heartbeats.
+    policy = cfg.get("policy")
+    guard = None
+    if policy is not None and (
+        policy.max_retries or policy.timeout_s is not None
+    ):
+        from repro.exec.interp import StepGuard
+
+        guard = StepGuard(
+            policy,
+            on_retry=lambda step, n, e: tell(("retry", wid, step)),
+            on_timeout=lambda step: tell(("step_timeout", wid, step)),
+        )
+
     recorder = None
     if cfg.get("trace"):
         from repro.obs.events import TraceRecorder
@@ -306,7 +325,12 @@ def _worker_main(cfg: dict) -> None:
                     out = dict(recorded[_step])  # resume: replay, don't redo
                 else:
                     try:
-                        out = dict(_fn(inputs))
+                        if guard is not None:
+                            out = dict(
+                                guard.fire(_step, lambda: _fn(inputs))
+                            )
+                        else:
+                            out = dict(_fn(inputs))
                     except BaseException as e:  # noqa: BLE001
                         tell(
                             (
@@ -414,6 +438,7 @@ class MultiprocessProgram(BackendProgram):
         ack_timeout = float(opts.pop("ack_timeout", 1.0))
         kill_at = opts.pop("_kill_at_step", None)
         tracing = bool(opts.pop("trace", False))
+        policy = opts.pop("policy", None)
         recover = str(opts.pop("recover", "off"))
         if recover not in ("off", "spare", "fold"):
             raise ValueError(
@@ -455,12 +480,18 @@ class MultiprocessProgram(BackendProgram):
             store.update(initial_payloads)
         self._store, self._completed = store, completed
 
+        from repro.exec.interp import Deadline
+
         ctx = mp.get_context(start_method)
         program = self.program
         recoveries: list[dict] = []
         all_pids: dict[tuple[int, int], int] = {}
         fatal: tuple | None = None
         attempt = 0
+        deadline = Deadline(
+            policy.deadline_s if policy is not None else None
+        )
+        policy_counts = {"retries": 0, "timeouts": 0, "heartbeat_deaths": 0}
         while True:
             groups = assign_workers(
                 program,
@@ -469,6 +500,8 @@ class MultiprocessProgram(BackendProgram):
                 # network pinning only applies to the fleet it planned.
                 schedule=schedule if attempt == 0 else None,
             )
+            hb_before = policy_counts["heartbeat_deaths"]
+            rem = deadline.remaining()
             failure, finals, pids = self._attempt(
                 program,
                 store,
@@ -477,18 +510,25 @@ class MultiprocessProgram(BackendProgram):
                 groups=groups,
                 ctx=ctx,
                 transport_name=transport_name,
-                timeout_s=timeout_s,
+                timeout_s=(
+                    timeout_s if rem is None
+                    else max(min(timeout_s, rem), 0.01)
+                ),
                 ack_timeout=ack_timeout,
                 kill_at=kill_at,
                 tracing=tracing,
                 recorder=recorder,
                 offsets=offsets,
+                policy=policy,
+                policy_counts=policy_counts,
             )
             for wid, pid in pids.items():
                 all_pids[(attempt, wid)] = pid
             self.last_pids = dict(all_pids)
             if failure is None:
                 break
+            if failure[0] == "timeout" and deadline.expired():
+                deadline.check()  # the run deadline, not the step timeout
             # Only process *death* is recoverable — a deterministic step
             # exception ("error") would just re-raise on the replacement,
             # and a timeout already tore the whole fleet down.
@@ -536,6 +576,10 @@ class MultiprocessProgram(BackendProgram):
                 "renaming": dict(ren),
                 "completed_steps": len(completed),
             }
+            if policy_counts["heartbeat_deaths"] > hb_before:
+                # The worker was not SIGKILLed from outside — the policy's
+                # progress heartbeat declared the straggler dead.
+                event["declared_by"] = "heartbeat"
             if schedule is not None:
                 try:
                     event["predicted_makespan_s"] = resimulate(
@@ -590,17 +634,20 @@ class MultiprocessProgram(BackendProgram):
                 data[loc].update(local)
                 for d, v in local.items():
                     store[(loc, d)] = v
+        stats = {
+            "workers": len(groups),
+            "groups": {i: list(g) for i, g in enumerate(groups)},
+            "pids": dict(pids),
+            "transport": transport_name,
+            "start_method": start_method,
+            "recoveries": recoveries,
+        }
+        if policy is not None:
+            stats["policy"] = dict(policy_counts)
         return ExecutionResult(
             backend="multiprocess",
             data=data,
-            stats={
-                "workers": len(groups),
-                "groups": {i: list(g) for i, g in enumerate(groups)},
-                "pids": dict(pids),
-                "transport": transport_name,
-                "start_method": start_method,
-                "recoveries": recoveries,
-            },
+            stats=stats,
             profile=profile,
         )
 
@@ -620,6 +667,8 @@ class MultiprocessProgram(BackendProgram):
         tracing: bool,
         recorder,
         offsets: dict[int, float],
+        policy=None,
+        policy_counts: dict[str, int] | None = None,
     ) -> tuple[tuple | None, dict, dict[int, int]]:
         """Spawn one worker fleet for ``program`` and drive it to done/fail.
 
@@ -645,11 +694,35 @@ class MultiprocessProgram(BackendProgram):
         last_exec: dict[int, tuple[str, str]] = {}
         finals: dict[int, dict[str, dict[str, Any]]] = {}
         failure: tuple | None = None
+        counts = policy_counts if policy_counts is not None else {}
+        #: Progress heartbeat: every control message from a worker is a
+        #: beat.  A worker *inside a step* (an un-matched "exec") that
+        #: stays silent past the policy's heartbeat deadline is a
+        #: straggler — declared dead below, which maps it onto the same
+        #: ("crash", ...) path a SIGKILL takes, so elastic recovery fires
+        #: without waiting for the process to actually die.
+        hb_timeout = (
+            policy.heartbeat_timeout_s if policy is not None else None
+        )
+        last_progress: dict[int, float] = {}
 
         def handle(msg: tuple, wid: int) -> tuple | None:
             """Apply one worker message; return a failure record or None."""
             nonlocal started
+            last_progress[wid] = time.monotonic()
             kind = msg[0]
+            if kind == "retry":
+                counts["retries"] = counts.get("retries", 0) + 1
+                if recorder is not None:
+                    t = time.monotonic()
+                    recorder.add(
+                        ("policy", groups[wid][0], f"retry:{msg[2]}",
+                         t, t, None, None, None, None)
+                    )
+                return None
+            if kind == "step_timeout":
+                counts["timeouts"] = counts.get("timeouts", 0) + 1
+                return None
             if kind == "ready":
                 ready.add(wid)
                 pids[wid] = msg[2]
@@ -726,6 +799,7 @@ class MultiprocessProgram(BackendProgram):
                     ack_timeout=ack_timeout,
                     kill_at_step=kill_at,
                     trace=tracing,
+                    policy=policy,
                 )
                 proc = ctx.Process(
                     target=_worker_main,
@@ -754,10 +828,15 @@ class MultiprocessProgram(BackendProgram):
                 if remaining <= 0:
                     failure = ("timeout",)
                     break
+                wait_timeout = remaining
+                if hb_timeout is not None:
+                    # Wake often enough to notice a silent straggler well
+                    # within one heartbeat window.
+                    wait_timeout = min(remaining, max(hb_timeout / 4, 0.05))
                 objs = list(live_conns) + [
                     procs[i].sentinel for i in pending
                 ]
-                for obj in mpc.wait(objs, timeout=remaining):
+                for obj in mpc.wait(objs, timeout=wait_timeout):
                     if obj in live_conns:
                         wid = live_conns[obj]
                         try:
@@ -794,6 +873,39 @@ class MultiprocessProgram(BackendProgram):
                                 step,
                                 procs[wid].exitcode,
                             )
+                        break
+                if failure is None and hb_timeout is not None and started:
+                    now = time.monotonic()
+                    for wid in sorted(pending):
+                        if wid not in last_exec:
+                            # Blocked on a recv/barrier — waiting on a peer
+                            # is not straggling; only a worker silent *inside
+                            # a step* can be declared.
+                            continue
+                        if now - last_progress.get(wid, now) <= hb_timeout:
+                            continue
+                        loc, step = last_exec[wid]
+                        counts["heartbeat_deaths"] = (
+                            counts.get("heartbeat_deaths", 0) + 1
+                        )
+                        if recorder is not None:
+                            recorder.add(
+                                ("policy", loc,
+                                 f"heartbeat_death:{step or '-'}",
+                                 now, now, None, None, None, None)
+                            )
+                        # Declare the straggler dead: terminate it and
+                        # surface the same ("crash", ...) record a real
+                        # process death produces — the elastic recovery
+                        # path (spare/fold) takes over from there.
+                        procs[wid].terminate()
+                        procs[wid].join(5)
+                        if procs[wid].is_alive():
+                            procs[wid].kill()
+                            procs[wid].join(5)
+                        failure = (
+                            "crash", wid, loc, step, procs[wid].exitcode
+                        )
                         break
         finally:
             for proc in procs:

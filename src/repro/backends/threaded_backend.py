@@ -119,6 +119,7 @@ class ThreadedProgram(BackendProgram):
         opts = dict(self.options)
         opts.pop("schedule", None)  # placement already baked into the IR
         timeout_s = float(opts.pop("timeout_s", 60.0))
+        policy = opts.pop("policy", None)
         recorder = self._make_recorder(opts)
         transport = self._make_transport(opts)
         rt = ThreadedProgramRuntime(
@@ -128,12 +129,17 @@ class ThreadedProgram(BackendProgram):
             transport=transport,
             timeout_s=timeout_s,
             recorder=recorder,
+            policy=policy,
         )
         data = rt.run()
+        stats = transport.stats()
+        if policy is not None:
+            stats["policy"] = rt._guard.counts() if rt._guard else {}
+            stats["recoveries"] = list(rt.recoveries)
         return ExecutionResult(
             backend="threaded",
             data={loc: dict(d) for loc, d in data.items()},
-            stats=transport.stats(),
+            stats=stats,
             profile=self._profile(recorder),
         )
 
@@ -172,6 +178,7 @@ class ThreadedProgram(BackendProgram):
         opts.pop("schedule", None)
         timeout_s = float(opts.pop("timeout_s", 60.0))
         tracing = bool(opts.pop("trace", False))
+        policy = opts.pop("policy", None)
         transport = self._make_transport(opts)
         batch_tag = f"b{next(_BATCH_SEQ)}"
         programs = self.program.by_location
@@ -205,6 +212,7 @@ class ThreadedProgram(BackendProgram):
                 branch_pool=branch_pool,
                 validate=False,  # compile() already checked coverage
                 recorder=recorders[i],
+                policy=policy,
             )
             for i, payloads in enumerate(inputs)
         ]
@@ -247,11 +255,17 @@ class ThreadedProgram(BackendProgram):
         results = []
         for rt, recorder in zip(runtimes, recorders):
             rt._raise_first_error()
+            extra: dict[str, Any] = {}
+            if policy is not None:
+                extra = {
+                    "policy": rt._guard.counts() if rt._guard else {},
+                    "recoveries": list(rt.recoveries),
+                }
             results.append(
                 ExecutionResult(
                     backend="threaded",
                     data={loc: dict(d) for loc, d in rt.data.items()},
-                    stats=dict(stats, batch_instances=len(runtimes)),
+                    stats=dict(stats, batch_instances=len(runtimes), **extra),
                     profile=self._profile(recorder),
                 )
             )

@@ -31,11 +31,17 @@ from .program import (
     lower_system,
     to_action,
 )
-from .interp import Cursor
+from .interp import Cursor, Deadline, StepGuard
+from .policy import FaultPolicy, RunDeadlineExceeded, StepTimeoutError
 from .emit import emit_location_source, emit_program_sources
 from .elastic import rename_program, resimulate
 
 __all__ = [
+    "Deadline",
+    "FaultPolicy",
+    "RunDeadlineExceeded",
+    "StepGuard",
+    "StepTimeoutError",
     "ExecOp",
     "SendOp",
     "RecvOp",

@@ -38,11 +38,15 @@ from repro.core.parser import dumps
 
 from .interp import (
     Cursor,
+    Deadline,
+    call_with_timeout,
     enabled_exec_picks,
     first_enabled_comm,
     record_comm_fire,
     record_exec_fire,
+    record_policy_fire,
 )
+from .policy import FaultPolicy, StepTimeoutError
 from .program import ExecOp, ExecProgram
 
 PayloadKey = tuple[str, str]  # (location, data_name)
@@ -76,6 +80,7 @@ class ProgramRuntime:
         heartbeat=None,
         completed: frozenset[str] = frozenset(),
         recorder=None,
+        policy: FaultPolicy | None = None,
     ):
         from repro.workflow.fault import (
             HeartbeatMonitor,
@@ -88,12 +93,22 @@ class ProgramRuntime:
         self.steps = dict(steps)
         self.payloads: dict[PayloadKey, Any] = dict(initial_payloads or {})
         self.expected_s = dict(expected_s or {})
+        # A uniform FaultPolicy constructs the engines unless the caller
+        # passed explicit ones (explicit beats policy beats defaults).
+        self.policy = policy
+        if policy is not None:
+            retry = retry or policy.retry_policy()
+            speculation = speculation or policy.speculation_policy()
+            heartbeat = heartbeat or policy.heartbeat_monitor()
         self.retry = retry or RetryPolicy()
         self.speculation = speculation or SpeculationPolicy(enabled=False)
         self.max_workers = max_workers
         self.checkpoint_every = checkpoint_every
         self.checkpoint_path = Path(checkpoint_path) if checkpoint_path else None
-        self.heartbeat = heartbeat or HeartbeatMonitor(timeout_s=60.0)
+        # Satellite fix: the documented default now lives in ONE place
+        # (fault.DEFAULT_HEARTBEAT_TIMEOUT_S) instead of a 5s dataclass
+        # default silently overridden to 60s here.
+        self.heartbeat = heartbeat or HeartbeatMonitor()
         self.stats = RunStats()
         self.recorder = recorder
         self.completed_execs: set[str] = set(completed)
@@ -194,9 +209,25 @@ class ProgramRuntime:
             return dict(self._recorded[op.step])
         inputs = {d: self.payloads[(leader, d)] for d in op.inputs}
         fn = self.steps[op.step].fn
+        timeout_s = self.policy.timeout_s if self.policy is not None else None
 
         def attempt() -> Mapping[str, Any]:
-            return fn(inputs)
+            if timeout_s is None:
+                return fn(inputs)
+            try:
+                return call_with_timeout(
+                    lambda: fn(inputs), timeout_s, op.step
+                )
+            except StepTimeoutError:
+                with self._lock:
+                    self.stats.timeouts += 1
+                if self.recorder is not None:
+                    t = time.monotonic()
+                    record_policy_fire(
+                        self.recorder, "timeout", leader, op.step,
+                        t - timeout_s, t,
+                    )
+                raise
 
         def with_retry() -> Mapping[str, Any]:
             return self.retry.run(
@@ -249,10 +280,20 @@ class ProgramRuntime:
 
         t_start = time.monotonic()
         since_ckpt = 0
+        deadline = Deadline(
+            self.policy.deadline_s if self.policy is not None else None
+        )
         pool = ThreadPoolExecutor(max_workers=self.max_workers)
         try:
             inflight: dict[tuple, tuple[ExecOp, tuple, Future]] = {}
             for _ in range(max_rounds):
+                if deadline.expired():
+                    if self.recorder is not None:
+                        t = time.monotonic()
+                        record_policy_fire(
+                            self.recorder, "deadline", "-", "run", t, t
+                        )
+                    deadline.check()  # raises RunDeadlineExceeded
                 progressed = self._apply_comms() > 0
 
                 for op, picks in self._enabled_execs():
@@ -272,6 +313,7 @@ class ProgramRuntime:
 
                 done, _ = wait(
                     [f for _, _, f in inflight.values()],
+                    timeout=deadline.remaining(),
                     return_when=FIRST_COMPLETED,
                 )
                 for key in [

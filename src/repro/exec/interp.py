@@ -17,7 +17,15 @@ the same :class:`~repro.exec.program.ControlSpec` with real threads.
 
 from __future__ import annotations
 
-from typing import Iterable, Mapping
+import threading
+import time
+from typing import TYPE_CHECKING, Any, Callable, Iterable, Mapping
+
+# .policy is imported lazily inside the helpers below: policy.py pulls in
+# repro.workflow.fault, whose package __init__ imports repro.workflow.threaded,
+# which imports this module — a top-level import here would close that cycle.
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .policy import FaultPolicy
 
 from .program import (
     K_ACT,
@@ -31,10 +39,14 @@ from .program import (
 
 __all__ = [
     "Cursor",
+    "Deadline",
+    "StepGuard",
+    "call_with_timeout",
     "first_enabled_comm",
     "enabled_exec_picks",
     "record_comm_fire",
     "record_exec_fire",
+    "record_policy_fire",
     "record_recv_fire",
     "record_send_fire",
 ]
@@ -264,3 +276,146 @@ def record_exec_fire(recorder, op: ExecOp, t0: float, t1: float,
         return
     for loc in locations if locations is not None else op.locations:
         recorder.add(("exec", loc, op.step, t0, t1, None, None, None, None))
+
+
+def record_policy_fire(recorder, kind: str, location: str, step: str,
+                       t0: float, t1: float) -> None:
+    """One policy-outcome span (``kind`` ∈ retry/timeout/speculation/
+    heartbeat_death/deadline), named ``"<kind>:<step>"`` so Perfetto rows
+    group by mechanism.  Same None fast-path contract as the fire helpers."""
+    if recorder is None:
+        return
+    recorder.add(("policy", location, f"{kind}:{step}",
+                  t0, t1, None, None, None, None))
+
+
+# ---------------------------------------------------------------------------
+# Shared fault-policy enforcement — the ONE implementation of per-step
+# timeout + retry + run deadline that every backend wires around its step
+# fires (the same single-home pattern as the span helpers above), so the
+# conformance suite can demand identical policy semantics from interpreters
+# with wildly different architectures.
+# ---------------------------------------------------------------------------
+
+
+def call_with_timeout(fn: Callable[[], Any], timeout_s: float | None,
+                      step: str) -> Any:
+    """Run ``fn()`` bounded by ``timeout_s`` wall-clock seconds.
+
+    The attempt runs on a fresh daemon thread; on overrun the thread is
+    **abandoned** (not killed — Python cannot) and :class:`StepTimeoutError`
+    is raised.  Abandonment is sound for SWIRL steps: they are pure, so a
+    late-finishing orphan has no observable effect — its result is simply
+    never read.
+    """
+    from .policy import StepTimeoutError
+
+    if timeout_s is None:
+        return fn()
+    box: list[tuple[str, Any]] = []
+
+    def target() -> None:
+        try:
+            box.append(("ok", fn()))
+        except BaseException as e:  # noqa: BLE001 — re-raised on the caller
+            box.append(("err", e))
+
+    t = threading.Thread(target=target, daemon=True, name=f"step-{step}")
+    t.start()
+    t.join(timeout_s)
+    if not box:
+        raise StepTimeoutError(step, timeout_s)
+    kind, value = box[0]
+    if kind == "err":
+        raise value
+    return value
+
+
+class StepGuard:
+    """Wraps step fires with one :class:`FaultPolicy`'s timeout + retry.
+
+    Thread-safe (location threads and speculation pools share one guard);
+    counts outcomes for ``result.stats`` and invokes optional callbacks so
+    backends can emit spans / protocol messages per retry or timeout.
+    """
+
+    __slots__ = ("policy", "retry", "retries", "timeouts",
+                 "_on_retry", "_on_timeout", "_lock")
+
+    def __init__(self, policy: FaultPolicy, *, rng: Any = None,
+                 on_retry: Callable[[str, int, Exception], None] | None = None,
+                 on_timeout: Callable[[str], None] | None = None):
+        self.policy = policy
+        self.retry = policy.retry_policy(rng)
+        self.retries = 0
+        self.timeouts = 0
+        self._on_retry = on_retry
+        self._on_timeout = on_timeout
+        self._lock = threading.Lock()
+
+    def fire(self, step: str, fn: Callable[[], Any]) -> Any:
+        """Run one step body under the policy; raises what the policy lets
+        escape (:class:`TransientError` after the retry budget,
+        :class:`~repro.workflow.fault.PermanentError` immediately)."""
+        from .policy import StepTimeoutError
+
+        timeout_s = self.policy.timeout_s
+
+        def attempt() -> Any:
+            if timeout_s is None:
+                return fn()
+            try:
+                return call_with_timeout(fn, timeout_s, step)
+            except StepTimeoutError:
+                with self._lock:
+                    self.timeouts += 1
+                if self._on_timeout is not None:
+                    self._on_timeout(step)
+                raise
+
+        if self.retry is None:
+            return attempt()
+
+        def note(n: int, e: Exception) -> None:
+            with self._lock:
+                self.retries += 1
+            if self._on_retry is not None:
+                self._on_retry(step, n, e)
+
+        return self.retry.run(attempt, on_retry=note)
+
+    def counts(self) -> dict[str, int]:
+        """Snapshot for ``result.stats["policy"]``."""
+        with self._lock:
+            return {"retries": self.retries, "timeouts": self.timeouts}
+
+
+class Deadline:
+    """Whole-run wall-clock budget; inert when ``deadline_s`` is ``None``."""
+
+    __slots__ = ("deadline_s", "_t0", "_clock")
+
+    def __init__(self, deadline_s: float | None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.deadline_s = deadline_s
+        self._clock = clock
+        self._t0 = clock()
+
+    def elapsed(self) -> float:
+        return self._clock() - self._t0
+
+    def remaining(self) -> float | None:
+        """Seconds left (may be ≤ 0), or ``None`` when unbounded — feed it
+        straight into a blocking wait's ``timeout=``."""
+        if self.deadline_s is None:
+            return None
+        return self.deadline_s - self.elapsed()
+
+    def expired(self) -> bool:
+        return self.deadline_s is not None and self.elapsed() > self.deadline_s
+
+    def check(self) -> None:
+        if self.expired():
+            from .policy import RunDeadlineExceeded
+
+            raise RunDeadlineExceeded(self.deadline_s, elapsed_s=self.elapsed())

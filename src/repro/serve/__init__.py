@@ -50,13 +50,18 @@ from .admission import (  # noqa: F401
 from .cache import CacheEntry, PlanCache  # noqa: F401
 from .client import GatewayClient, GatewayError  # noqa: F401
 from .gateway import Gateway  # noqa: F401
-from .service import ServiceDraining, WorkflowService  # noqa: F401
+from .service import (  # noqa: F401
+    DeadlineExceeded,
+    ServiceDraining,
+    WorkflowService,
+)
 from .submission import SubmissionError, compile_submission  # noqa: F401
 
 __all__ = [
     "AdmissionController",
     "AdmissionRejected",
     "CacheEntry",
+    "DeadlineExceeded",
     "Gateway",
     "GatewayClient",
     "GatewayError",

@@ -69,12 +69,20 @@ class TenantConfig:
     A :meth:`run_many` batch counts as **one** admission — its internal
     instance parallelism is bounded separately by the service's batch
     concurrency, so a tenant cannot multiply its quota by batching.
+
+    ``max_retries`` is the tenant's *server-side* fault policy: the service
+    transparently re-runs a request that failed with a **recoverable**
+    backend error (a worker crash or a ``TransientError`` that exhausted
+    the backend's own budget) up to this many extra times, all inside the
+    tenant's single admission slot.  0 (the default) means failures
+    surface to the client immediately.
     """
 
     name: str
     api_key: str
     max_concurrent: int = 8
     max_queue: int = 16
+    max_retries: int = 0
 
     def __post_init__(self) -> None:
         if self.max_concurrent < 1:
@@ -83,6 +91,10 @@ class TenantConfig:
             )
         if self.max_queue < 0:
             raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}"
+            )
 
 
 class _Ticket:
@@ -157,6 +169,13 @@ class AdmissionController:
 
     def tenant_names(self) -> list[str]:
         return list(self._tenants)
+
+    def tenant_config(self, name: str) -> TenantConfig:
+        """The registered :class:`TenantConfig` for ``name``."""
+        st = self._tenants.get(name)
+        if st is None:
+            raise UnknownTenantError(name)
+        return st.cfg
 
     @property
     def draining(self) -> bool:

@@ -137,12 +137,20 @@ class GatewayClient:
         return self._request("GET", f"/v1/workflows/{fingerprint}")
 
     def run(
-        self, fingerprint: str, inputs: Mapping[str, Any] | None = None
+        self,
+        fingerprint: str,
+        inputs: Mapping[str, Any] | None = None,
+        *,
+        deadline_s: float | None = None,
     ) -> dict[str, Any]:
+        """One instance.  ``deadline_s`` caps the server-side run — on
+        overrun the gateway answers a typed 504 (:class:`GatewayError`
+        with ``status == 504``)."""
+        body: dict[str, Any] = {"inputs": dict(inputs or {})}
+        if deadline_s is not None:
+            body["deadline_s"] = deadline_s
         return self._request(
-            "POST",
-            f"/v1/workflows/{fingerprint}/run",
-            {"inputs": dict(inputs or {})},
+            "POST", f"/v1/workflows/{fingerprint}/run", body
         )
 
     def run_many(
@@ -151,10 +159,13 @@ class GatewayClient:
         inputs: Sequence[Mapping[str, Any]],
         *,
         max_concurrent: int | None = None,
+        deadline_s: float | None = None,
     ) -> dict[str, Any]:
         body: dict[str, Any] = {"inputs": [dict(i) for i in inputs]}
         if max_concurrent is not None:
             body["max_concurrent"] = max_concurrent
+        if deadline_s is not None:
+            body["deadline_s"] = deadline_s
         return self._request(
             "POST", f"/v1/workflows/{fingerprint}/run_many", body
         )

@@ -36,7 +36,11 @@ a traceback.  ``400`` malformed submission (typed, with line/column for
 fingerprint, ``413`` request body over the gateway's ``max_body_bytes``
 (typed ``BodyTooLarge`` with the limit and the declared length; the body
 is rejected *unread*, so the response also closes the connection), ``429``
-quota exhausted (with ``Retry-After``), ``503`` draining.  HTTP/1.1 with
+quota exhausted (with ``Retry-After``), ``503`` draining, ``504`` run
+deadline exceeded (typed ``DeadlineExceeded``; the run is abandoned and
+its admission slot released — set a deadline per request with
+``"deadline_s"`` in the run/run_many body or the ``X-Deadline-S``
+header, body winning when both are present).  HTTP/1.1 with
 correct ``Content-Length``, so client connections stay alive across
 requests (which is what makes cache-hit serving fast enough to
 benchmark).
@@ -66,6 +70,7 @@ from repro.obs.events import current_trace_id
 from repro.obs.metrics import MetricsRegistry
 from repro.serve.admission import AdmissionRejected, UnknownTenantError
 from repro.serve.service import (
+    DeadlineExceeded,
     ServiceDraining,
     UnknownWorkflowError,
     WorkflowService,
@@ -198,6 +203,15 @@ class _Handler(BaseHTTPRequestHandler):
             error = {**error, "trace_id": self._trace_id}
         self._reply(status, {"error": error}, headers=headers)
 
+    def _deadline_of(self, body: dict[str, Any]) -> Any:
+        """The request's deadline: body ``deadline_s``, else the
+        ``X-Deadline-S`` header (body wins).  Returned raw — the service
+        validates and maps garbage to a typed 400."""
+        if "deadline_s" in body:
+            return body["deadline_s"]
+        header = (self.headers.get("X-Deadline-S") or "").strip()
+        return header or None
+
     def _read_body(self) -> Any:
         length = int(self.headers.get("Content-Length") or 0)
         limit = self.gateway.max_body_bytes
@@ -320,7 +334,10 @@ class _Handler(BaseHTTPRequestHandler):
                 self._reply(
                     200,
                     service.run(
-                        params["fp"], body.get("inputs"), tenant=tenant
+                        params["fp"],
+                        body.get("inputs"),
+                        tenant=tenant,
+                        deadline_s=self._deadline_of(body),
                     ),
                 )
             elif name == "run_many":
@@ -338,6 +355,7 @@ class _Handler(BaseHTTPRequestHandler):
                         body["inputs"],
                         tenant=tenant,
                         max_concurrent=body.get("max_concurrent"),
+                        deadline_s=self._deadline_of(body),
                     ),
                 )
             elif name == "stats":
@@ -386,6 +404,8 @@ class _Handler(BaseHTTPRequestHandler):
                 {"type": "Draining", "message": str(e)},
                 headers={"Retry-After": "1"},
             )
+        except DeadlineExceeded as e:
+            self._error(504, e.to_json())
         except BrokenPipeError:
             raise  # client went away mid-reply; nothing to report to it
         except Exception as e:  # noqa: BLE001 — the no-traceback contract

@@ -48,7 +48,12 @@ from repro.serve.submission import (
     parse_payload_keys,
 )
 
-__all__ = ["ServiceDraining", "WorkflowService", "UnknownWorkflowError"]
+__all__ = [
+    "DeadlineExceeded",
+    "ServiceDraining",
+    "WorkflowService",
+    "UnknownWorkflowError",
+]
 
 logger = logging.getLogger("repro.serve.service")
 
@@ -84,6 +89,57 @@ class UnknownWorkflowError(KeyError):
 
 class ServiceDraining(RuntimeError):
     """The service is shutting down and admits no new work (HTTP 503)."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's ``deadline_s`` elapsed before its run finished (HTTP 504).
+
+    The service **abandons** the run: the worker thread executing it is a
+    daemon and its eventual result is never read — sound because SWIRL
+    steps are pure, so an orphaned run has no observable effect beyond its
+    own (discarded) store.  The admission slot is released immediately, so
+    a deadline abort can never leak an in-flight quota unit.
+    """
+
+    def __init__(self, deadline_s: float, *, fingerprint: str = ""):
+        tag = f" of workflow {fingerprint[:12]}" if fingerprint else ""
+        super().__init__(
+            f"run{tag} abandoned after its {deadline_s}s deadline"
+        )
+        self.deadline_s = deadline_s
+        self.fingerprint = fingerprint
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "type": "DeadlineExceeded",
+            "message": str(self),
+            "deadline_s": self.deadline_s,
+            "fingerprint": self.fingerprint,
+        }
+
+
+def _recoverable(exc: BaseException) -> bool:
+    """Is this failure worth a server-side re-run (tenant ``max_retries``)?
+
+    Worker-process deaths and transient step failures are recoverable —
+    the run may succeed on a fresh attempt.  Everything else (permanent
+    step errors, submission bugs, deadlocks) is deterministic and retrying
+    would only burn the tenant's slot.
+    """
+    from repro.backends.multiprocess import WorkerFailedError
+    from repro.workflow.fault import TransientError
+
+    seen: set[int] = set()
+    cur: BaseException | None = exc
+    while cur is not None and id(cur) not in seen:
+        seen.add(id(cur))
+        if isinstance(cur, (WorkerFailedError, TransientError)):
+            return True
+        # Backends wrap the failing step's error (e.g. the threaded
+        # runtime's "location X failed: ..." RuntimeError) — walk the
+        # cause chain to the root.
+        cur = cur.__cause__ or cur.__context__
+    return False
 
 
 def _source_digest(body: Any) -> str:
@@ -143,6 +199,8 @@ class WorkflowService:
             "instances_failed": 0,
             "rejected": 0,
             "recoveries": 0,
+            "run_retries": 0,
+            "deadline_aborts": 0,
         }
 
     def _count(self, **deltas: int) -> None:
@@ -226,11 +284,35 @@ class WorkflowService:
             raise UnknownWorkflowError(fingerprint)
         return entry
 
-    def _admitted(self, tenant: TenantConfig | str | None):
+    def _tenant_name(self, tenant: TenantConfig | str | None) -> str:
         name = tenant.name if isinstance(tenant, TenantConfig) else tenant
         if name is None:
             name = self.admission.tenant_names()[0]
-        return self.admission.admit(name, timeout_s=self.admission_timeout_s)
+        return name
+
+    def _admitted(self, tenant: TenantConfig | str | None):
+        return self.admission.admit(
+            self._tenant_name(tenant), timeout_s=self.admission_timeout_s
+        )
+
+    @staticmethod
+    def _check_deadline_s(deadline_s: float | None) -> float | None:
+        if deadline_s is None:
+            return None
+        try:
+            deadline_s = float(deadline_s)
+        except (TypeError, ValueError):
+            raise SubmissionError(
+                f"deadline_s must be a positive number, "
+                f"got {deadline_s!r}",
+                kind="deadline",
+            ) from None
+        if not deadline_s > 0:
+            raise SubmissionError(
+                f"deadline_s must be a positive number, got {deadline_s!r}",
+                kind="deadline",
+            )
+        return deadline_s
 
     def run(
         self,
@@ -238,9 +320,16 @@ class WorkflowService:
         inputs: Any = None,
         *,
         tenant: TenantConfig | str | None = None,
+        deadline_s: float | None = None,
     ) -> dict[str, Any]:
-        """Execute one instance of a cached workflow; returns its data."""
+        """Execute one instance of a cached workflow; returns its data.
+
+        ``deadline_s`` bounds the request end-to-end (all server-side
+        retry attempts included): on overrun the run is abandoned and
+        :class:`DeadlineExceeded` raised — the gateway's 504.
+        """
         entry = self._entry(fingerprint)
+        deadline_s = self._check_deadline_s(deadline_s)
         payloads = parse_payload_keys(
             inputs, entry.plan.system.locations()
         )
@@ -248,7 +337,10 @@ class WorkflowService:
         with self._admitted(tenant):
             try:
                 result = self._run_guarded(
-                    entry, lambda exe: exe.run(initial_payloads=payloads)
+                    entry,
+                    lambda exe: exe.run(initial_payloads=payloads),
+                    tenant=tenant,
+                    deadline_s=deadline_s,
                 )
             except Exception as e:
                 self._count(instances_failed=1)
@@ -271,14 +363,17 @@ class WorkflowService:
         *,
         tenant: TenantConfig | str | None = None,
         max_concurrent: int | None = None,
+        deadline_s: float | None = None,
     ) -> dict[str, Any]:
         """Execute a batch through the backend's persistent run_many lanes.
 
         One admission slot covers the whole batch (a tenant cannot inflate
         its quota by batching); internal parallelism is capped by the
-        service's ``batch_max_concurrent``.
+        service's ``batch_max_concurrent``.  ``deadline_s`` bounds the
+        whole batch, like :meth:`run`.
         """
         entry = self._entry(fingerprint)
+        deadline_s = self._check_deadline_s(deadline_s)
         if not isinstance(inputs, Sequence) or isinstance(inputs, (str, bytes)):
             raise SubmissionError(
                 "'inputs' must be a list (one object per instance)",
@@ -296,6 +391,8 @@ class WorkflowService:
                 results = self._run_guarded(
                     entry,
                     lambda exe: exe.run_many(payloads, max_concurrent=lanes),
+                    tenant=tenant,
+                    deadline_s=deadline_s,
                 )
             except Exception:
                 self._count(instances_failed=len(payloads))
@@ -309,19 +406,95 @@ class WorkflowService:
             "results": [{"data": r.data} for r in results],
         }
 
-    def _run_guarded(self, entry: CacheEntry, op):
+    def _run_guarded(
+        self,
+        entry: CacheEntry,
+        op,
+        *,
+        tenant: TenantConfig | str | None = None,
+        deadline_s: float | None = None,
+    ):
         """Run ``op(executable)``, serialising when the backend needs it.
 
         Backends advertising concurrent batches take no lock — that is the
         cache-hit hot path.  The others (``inprocess``/``multiprocess``/
         ``jax``) are serialised per entry so a burst of requests queues
         instead of tripping :class:`repro.api.ConcurrentRunError`.
+
+        Two per-request fault policies layer on top:
+
+        * the tenant's ``max_retries`` re-runs **recoverable** failures
+          (worker death, exhausted transient budget) inside the same
+          admission slot, and
+        * ``deadline_s`` bounds the request wall-clock; on overrun the
+          attempt thread is abandoned (steps are pure — see
+          :class:`DeadlineExceeded`) and the slot released at once.  An
+          abandoned attempt on a serialised backend may hold the entry's
+          run lock until it peters out; only same-fingerprint requests
+          queue behind it, never the admission quota.
         """
         exe = entry.executable
-        if exe.concurrent_runs:
-            return op(exe)
-        with entry.run_lock:
-            return op(exe)
+        max_retries = self.admission.tenant_config(
+            self._tenant_name(tenant)
+        ).max_retries
+
+        def locked_op():
+            if exe.concurrent_runs:
+                return op(exe)
+            with entry.run_lock:
+                return op(exe)
+
+        def attempt_all(abandoned: threading.Event | None):
+            for attempt in range(max_retries + 1):
+                try:
+                    return locked_op()
+                except Exception as e:  # noqa: BLE001 — filtered below
+                    last_attempt = attempt == max_retries
+                    gone = abandoned is not None and abandoned.is_set()
+                    if last_attempt or gone or not _recoverable(e):
+                        raise
+                    self._count(run_retries=1)
+                    logger.warning(
+                        "retrying %s after recoverable %s "
+                        "(attempt %d/%d) [trace_id=%s]",
+                        entry.fingerprint[:12],
+                        type(e).__name__,
+                        attempt + 1,
+                        max_retries,
+                        _trace_tag(),
+                    )
+
+        if deadline_s is None:
+            return attempt_all(None)
+
+        abandoned = threading.Event()
+        box: list[tuple[str, Any]] = []
+        done = threading.Event()
+
+        def target() -> None:
+            try:
+                box.append(("ok", attempt_all(abandoned)))
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                box.append(("err", e))
+            finally:
+                done.set()
+
+        worker = threading.Thread(
+            target=target,
+            daemon=True,
+            name=f"svc-run-{entry.fingerprint[:12]}",
+        )
+        worker.start()
+        if not done.wait(deadline_s):
+            abandoned.set()  # stop any further server-side retries
+            self._count(deadline_aborts=1)
+            raise DeadlineExceeded(
+                deadline_s, fingerprint=entry.fingerprint
+            )
+        kind, value = box[0]
+        if kind == "err":
+            raise value
+        return value
 
     # -- introspection ---------------------------------------------------------
     def describe(self, fingerprint: str) -> dict[str, Any]:

@@ -16,6 +16,7 @@
 
 from .channels import Channel, ChannelClosed, ChannelRegistry
 from .transport import (
+    AckTimeout,
     InMemoryTransport,
     SocketTransport,
     Transport,
@@ -24,12 +25,14 @@ from .transport import (
     socket_addresses,
 )
 from .fault import (
+    DEFAULT_HEARTBEAT_TIMEOUT_S,
     FlakyFn,
     HeartbeatMonitor,
     LocationDead,
     PermanentError,
     RetryPolicy,
     SlowFn,
+    SlowOnceAcrossProcesses,
     SpeculationPolicy,
     TransientError,
 )
@@ -44,9 +47,11 @@ from .elastic import (
 )
 
 __all__ = [
+    "AckTimeout",
     "Channel",
     "ChannelClosed",
     "ChannelRegistry",
+    "DEFAULT_HEARTBEAT_TIMEOUT_S",
     "Transport",
     "InMemoryTransport",
     "SocketTransport",
@@ -67,6 +72,7 @@ __all__ = [
     "LocationDead",
     "FlakyFn",
     "SlowFn",
+    "SlowOnceAcrossProcesses",
     "rename_locations",
     "fold_payloads",
     "recover_checkpoint",

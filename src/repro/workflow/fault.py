@@ -14,11 +14,21 @@ sound:
 
 from __future__ import annotations
 
+import os
+import random
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping
+
+#: The one heartbeat deadline default, shared by :class:`HeartbeatMonitor`
+#: and :class:`repro.exec.policy.FaultPolicy`.  Historically ``fault.py``
+#: said 5s while ``central.py`` constructed 60s; 30s is the documented
+#: middle ground — long enough that a loaded CI machine never declares a
+#: healthy worker dead, short enough that a genuinely wedged worker is
+#: recovered within one straggler window.
+DEFAULT_HEARTBEAT_TIMEOUT_S = 30.0
 
 
 class TransientError(RuntimeError):
@@ -35,8 +45,26 @@ class LocationDead(RuntimeError):
 
 @dataclass
 class RetryPolicy:
+    """Bounded retry with capped exponential backoff and **full jitter**.
+
+    The sleep before retry ``n`` (0-based) is drawn uniformly from
+    ``[0, min(backoff_cap_s, backoff_s * 2**n)]`` — the AWS "full jitter"
+    scheme, which decorrelates a thundering herd of retriers.  ``rng`` is
+    any object with ``random()``; inject a seeded ``random.Random`` for
+    deterministic tests.
+    """
+
     max_retries: int = 3
     backoff_s: float = 0.0  # tests keep this at 0
+    backoff_cap_s: float = 30.0
+    rng: Any = None
+
+    def sleep_s(self, attempt: int) -> float:
+        """The jittered sleep before retrying after failed ``attempt``."""
+        if not self.backoff_s:
+            return 0.0
+        ceiling = min(self.backoff_cap_s, self.backoff_s * (2**attempt))
+        return ceiling * (self.rng or random).random()
 
     def run(self, fn: Callable[[], Any], *, on_retry=None) -> Any:
         last: Exception | None = None
@@ -49,8 +77,9 @@ class RetryPolicy:
                 last = e
                 if on_retry is not None:
                     on_retry(attempt, e)
-                if self.backoff_s:
-                    time.sleep(self.backoff_s * (2**attempt))
+                delay = self.sleep_s(attempt)
+                if delay:
+                    time.sleep(delay)
         raise TransientError(
             f"step failed after {self.max_retries + 1} attempts"
         ) from last
@@ -98,7 +127,11 @@ class SpeculationPolicy:
 class HeartbeatMonitor:
     """Tracks per-location liveness; ``dead()`` lists expired locations."""
 
-    def __init__(self, timeout_s: float = 5.0, clock: Callable[[], float] = time.monotonic):
+    def __init__(
+        self,
+        timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.timeout_s = timeout_s
         self._clock = clock
         self._last: dict[str, float] = {}
@@ -169,5 +202,31 @@ class SlowFn:
             self.calls += 1
             n = self.calls
         if n <= self.slow_calls:
+            time.sleep(self.delay_s)
+        return self.fn(inputs)
+
+
+@dataclass
+class SlowOnceAcrossProcesses:
+    """Straggle exactly once **fleet-wide**, surviving process respawns.
+
+    :class:`SlowFn` counts calls in one process's memory; under the fork
+    start method every respawned worker inherits ``calls == 0`` and would
+    straggle again, so heartbeat-recovery scenarios never converge.  This
+    variant claims a filesystem flag (``O_CREAT | O_EXCL`` — atomic across
+    processes): the first caller anywhere in the fleet creates it and
+    sleeps, every later caller in any process is fast.
+    """
+
+    fn: Callable[[Mapping[str, Any]], Mapping[str, Any]]
+    flag_path: str
+    delay_s: float = 0.5
+
+    def __call__(self, inputs: Mapping[str, Any]) -> Mapping[str, Any]:
+        try:
+            os.close(os.open(self.flag_path, os.O_CREAT | os.O_EXCL))
+        except FileExistsError:
+            pass
+        else:
             time.sleep(self.delay_s)
         return self.fn(inputs)

@@ -54,6 +54,7 @@ class RunStats:
     comms: int = 0
     retries: int = 0
     speculations: int = 0
+    timeouts: int = 0
     checkpoints: int = 0
     wall_s: float = 0.0
     exec_log: list[tuple[str, str, float]] = field(default_factory=list)

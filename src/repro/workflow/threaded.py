@@ -25,7 +25,11 @@ from typing import Any, Mapping
 from repro.core.compile import LocationBundle, StepMeta
 from repro.core.syntax import Exec, Nil, Par, Recv, Send, Seq, Trace
 from repro.exec.interp import (
+    Cursor,
+    Deadline,
+    StepGuard,
     record_exec_fire,
+    record_policy_fire,
     record_recv_fire,
     record_send_fire,
 )
@@ -41,6 +45,22 @@ from repro.exec.program import (
 
 from .channels import ChannelRegistry
 from .transport import InMemoryTransport, Transport
+
+
+class _BranchAborted(RuntimeError):
+    """A Par branch gave up because a *sibling* poisoned the location.
+
+    Never the root cause — error-reporting sites prefer any other
+    exception over this one (see :func:`_first_real`).
+    """
+
+
+def _first_real(errs: list[BaseException]) -> BaseException:
+    """The first non-:class:`_BranchAborted` error, else the first error."""
+    for e in errs:
+        if not isinstance(e, _BranchAborted):
+            return e
+    return errs[0]
 
 
 def total_par_branches(programs: Mapping[str, "LocationProgram"]) -> int:
@@ -123,6 +143,7 @@ class ThreadedProgramRuntime:
         branch_pool=None,
         validate: bool = True,
         recorder=None,
+        policy=None,
     ):
         self.programs = dict(programs)
         self.steps = {loc: dict(metas) for loc, metas in steps.items()}
@@ -154,10 +175,38 @@ class ThreadedProgramRuntime:
         self._cond: dict[str, threading.Condition] = {
             loc: threading.Condition() for loc in self.programs
         }
+        #: A failed parallel branch poisons its location so sibling branches
+        #: blocked in ``_wait_data`` or ``_recv`` abort at once instead of
+        #: burning ``timeout_s`` — the location thread then reports the root
+        #: cause promptly (and, under a fault policy, crash-recovery replay
+        #: starts while the run-level join still has budget left).
+        self._poison: dict[str, BaseException | None] = {
+            loc: None for loc in self.programs
+        }
         for (l, d), v in (initial_payloads or {}).items():
             if l in self.data:
                 self.data[l][d] = v
         self.errors: list[tuple[str, BaseException]] = []
+        #: Uniform FaultPolicy (repro.exec.policy): a shared StepGuard wraps
+        #: every step fire with timeout + retry, and a per-location op log
+        #: (completed op indices, completion order) enables crash recovery —
+        #: a died location thread is replayed from its cursor.  The log is
+        #: only kept under a policy, so the policy-free hot path is unchanged.
+        self.policy = policy
+        self._guard: StepGuard | None = None
+        self._op_log: dict[str, list[int]] | None = None
+        self.recoveries: list[dict[str, Any]] = []
+        if policy is not None:
+            self._guard = StepGuard(
+                policy,
+                on_retry=lambda step, n, e: record_policy_fire(
+                    self.recorder, "retry", "-", step, _mono(), _mono()
+                ),
+                on_timeout=lambda step: record_policy_fire(
+                    self.recorder, "timeout", "-", step, _mono(), _mono()
+                ),
+            )
+            self._op_log = {loc: [] for loc in self.programs}
 
     def _endpoint(self, op: SendOp | RecvOp) -> tuple[str, str, str]:
         if self.instance_tag is None:
@@ -171,14 +220,63 @@ class ThreadedProgramRuntime:
 
     def _wait_data(self, loc: str, names) -> dict[str, Any]:
         with self._cond[loc]:
-            ok = self._cond[loc].wait_for(
-                lambda: all(d in self.data[loc] for d in names),
+            self._cond[loc].wait_for(
+                lambda: self._poison[loc] is not None
+                or all(d in self.data[loc] for d in names),
                 timeout=self.timeout_s,
             )
-            if not ok:
+            if not all(d in self.data[loc] for d in names):
+                poison = self._poison[loc]
+                if poison is not None:
+                    raise _BranchAborted(
+                        f"{loc} branch aborted: a sibling failed with "
+                        f"{poison!r}"
+                    )
                 missing = sorted(d for d in names if d not in self.data[loc])
                 raise TimeoutError(f"{loc} never received {missing}")
             return {d: self.data[loc][d] for d in names}
+
+    def _recv(self, loc: str, op: RecvOp):
+        """``transport.recv``, abortable by a sibling branch's poison.
+
+        A blocked receive cannot be woken through the location's data
+        condition, so it polls in short slices and checks the poison flag
+        between them — a crashed sibling must not leave this branch pinned
+        for the full ``timeout_s`` (the run must report the root cause
+        while the run-level join still has budget, and a crash-recovery
+        replay needs that budget).  The unconsumed message, if it ever
+        arrives, stays queued for the replay's own receive.
+        """
+        endpoint = self._endpoint(op)
+        deadline = _mono() + self.timeout_s
+        while True:
+            if self._poison[loc] is not None:
+                raise _BranchAborted(
+                    f"{loc} recv aborted: a sibling failed with "
+                    f"{self._poison[loc]!r}"
+                )
+            remaining = deadline - _mono()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"{loc} never received on {endpoint}"
+                )
+            try:
+                return self.transport.recv(
+                    endpoint, timeout=min(remaining, 0.05)
+                )
+            except TimeoutError:
+                continue
+
+    def _poison_location(self, loc: str, exc: BaseException) -> None:
+        """Abort the location's blocked data-waits and receives."""
+        with self._cond[loc]:
+            if self._poison[loc] is None:
+                self._poison[loc] = exc
+            self._cond[loc].notify_all()
+
+    def _clear_poison(self, loc: str) -> None:
+        with self._cond[loc]:
+            self._poison[loc] = None
 
     # -- barrier registry ------------------------------------------------------
     def _barrier_for(self, op) -> _ExecBarrier:
@@ -189,7 +287,22 @@ class ThreadedProgramRuntime:
             return self._barriers[key]
 
     # -- per-location interpreter ----------------------------------------------
-    def _run_op(self, loc: str, op) -> None:
+    def _fire(self, loc: str, op, meta, inputs):
+        """One step-body call, under the fault policy's guard when present."""
+        if self._guard is None:
+            return meta.fn(inputs)
+        return self._guard.fire(op.step, lambda: meta.fn(inputs))
+
+    def _run_op(self, loc: str, op, index: int | None = None) -> None:
+        """Interpret one op; log its index on success for crash replay."""
+        self._run_op_inner(loc, op)
+        if index is not None and self._op_log is not None:
+            # list.append is atomic under the GIL; one writer per location
+            # in normal runs, one per parallel branch inside a Par — either
+            # way the log records a valid completion order for this loc.
+            self._op_log[loc].append(index)
+
+    def _run_op_inner(self, loc: str, op) -> None:
         rec = self.recorder
         if isinstance(op, SendOp):
             # The datum may be produced by a sibling branch — wait for it.
@@ -202,15 +315,9 @@ class ThreadedProgramRuntime:
                 record_send_fire(rec, op, t0, _mono(), payload)
             return
         if isinstance(op, RecvOp):
-            if rec is None:
-                msg = self.transport.recv(
-                    self._endpoint(op), timeout=self.timeout_s
-                )
-            else:
-                t0 = _mono()
-                msg = self.transport.recv(
-                    self._endpoint(op), timeout=self.timeout_s
-                )
+            t0 = _mono()
+            msg = self._recv(loc, op)
+            if rec is not None:
                 record_recv_fire(rec, op, t0, _mono(), msg.payload)
             self._put_data(loc, {msg.data_name: msg.payload})
             return
@@ -219,10 +326,10 @@ class ThreadedProgramRuntime:
         if not op.is_spatial:
             inputs = self._wait_data(loc, op.inputs)
             if rec is None:
-                out = meta.fn(inputs)
+                out = self._fire(loc, op, meta, inputs)
             else:
                 t0 = _mono()
-                out = meta.fn(inputs)
+                out = self._fire(loc, op, meta, inputs)
                 record_exec_fire(rec, op, t0, _mono(), (loc,))
             self._put_data(loc, {d: out[d] for d in op.outputs})
             return
@@ -234,7 +341,7 @@ class ThreadedProgramRuntime:
         if op.leader:
             try:
                 inputs = self._wait_data(loc, op.inputs)
-                out = meta.fn(inputs)
+                out = self._fire(loc, op, meta, inputs)
                 barrier.publish({d: out[d] for d in op.outputs})
             except BaseException as e:  # noqa: BLE001
                 barrier.fail(e)
@@ -247,7 +354,8 @@ class ThreadedProgramRuntime:
     def _run_node(self, loc: str, spec, nid: int) -> None:
         kind = spec.kind[nid]
         if kind == K_ACT:
-            self._run_op(loc, self.programs[loc].ops[spec.instr[nid]])
+            i = spec.instr[nid]
+            self._run_op(loc, self.programs[loc].ops[i], i)
             return
         if kind == K_SEQ:
             for child in spec.children[nid]:
@@ -276,14 +384,25 @@ class ThreadedProgramRuntime:
             if not rest:
                 return
             futures = [
-                self._branch_pool.submit(self._run_node, loc, spec, c)
+                self._branch_pool.submit(self._run_branch, loc, spec, c)
                 for c in rest[:-1]
             ]
-            self._run_node(loc, spec, rest[-1])
+            self._run_branch(loc, spec, rest[-1])
             _, not_done = _fwait(futures, timeout=self.timeout_s)
             if not_done:
                 for f in not_done:
                     f.cancel()
+                # A failed sibling usually *caused* the stuck branch (its
+                # send never happened) — report the root cause, not the
+                # orphaned receiver.
+                errs = [
+                    f.exception()
+                    for f in futures
+                    if f.done() and not f.cancelled() and f.exception()
+                ]
+                real = [e for e in errs if not isinstance(e, _BranchAborted)]
+                if real or errs:
+                    raise (real or errs)[0]
                 raise TimeoutError(f"parallel branch stuck on {loc}")
             for f in futures:
                 f.result()  # propagate the first branch failure
@@ -292,7 +411,7 @@ class ThreadedProgramRuntime:
 
         def branch(child: int) -> None:
             try:
-                self._run_node(loc, spec, child)
+                self._run_branch(loc, spec, child)
             except BaseException as e:  # noqa: BLE001
                 errs.append(e)
 
@@ -305,9 +424,21 @@ class ThreadedProgramRuntime:
         for th in threads:
             th.join(self.timeout_s)
             if th.is_alive():
+                if errs:
+                    # The failed sibling is why this branch is stuck —
+                    # surface the root cause.
+                    raise _first_real(errs)
                 raise TimeoutError(f"parallel branch stuck on {loc}")
         if errs:
-            raise errs[0]
+            raise _first_real(errs)
+
+    def _run_branch(self, loc: str, spec, nid: int) -> None:
+        """One Par branch; a failure poisons the location's data waits."""
+        try:
+            self._run_node(loc, spec, nid)
+        except BaseException as e:  # noqa: BLE001
+            self._poison_location(loc, e)
+            raise
 
     def _run_location(self, loc: str) -> None:
         try:
@@ -315,9 +446,98 @@ class ThreadedProgramRuntime:
             if spec.root is not None:
                 self._run_node(loc, spec, spec.root)
         except BaseException as e:  # noqa: BLE001
+            if self._op_log is not None and not isinstance(e, TimeoutError):
+                # Crash recovery: the location thread died mid-program.
+                # Steps are pure and every completed op index is logged, so
+                # the location can be replayed from its cursor — completed
+                # ops skipped, the rest re-interpreted (same lineage
+                # argument as elastic worker recovery).  Timeouts are
+                # excluded: peer data that never arrived will not arrive
+                # on replay either, it would just block another timeout_s.
+                try:
+                    done = len(self._op_log[loc])
+                    self._replay_location(loc)
+                except BaseException as replay_err:  # noqa: BLE001
+                    self.errors.append((loc, e))
+                    self.errors.append((loc, replay_err))
+                else:
+                    self.recoveries.append(
+                        {
+                            "mode": "replay",
+                            "location": loc,
+                            "completed_ops": done,
+                            "error": repr(e),
+                        }
+                    )
+                    t = _mono()
+                    record_policy_fire(
+                        self.recorder, "replay", loc, "-", t, t
+                    )
+                return
             self.errors.append((loc, e))
 
+    def _replay_location(self, loc: str) -> None:
+        """Re-interpret one location from its logged completion cursor.
+
+        A fresh :class:`Cursor` is advanced through the logged indices (the
+        recorded order was a real execution order, so each is enabled when
+        completed), then the remaining ops run to termination.  Enabled ops
+        are scheduled *dynamically*: each completion immediately launches
+        whatever it newly enabled.  A lockstep frontier barrier would
+        deadlock here — e.g. ``{exec v, recv dv}`` can both be enabled while
+        ``recv dv`` waits on ``send dv``, which only becomes enabled once
+        ``exec v`` completes.
+        """
+        self._clear_poison(loc)
+        lp = self.programs[loc]
+        cur = Cursor(lp)
+        for i in self._op_log[loc]:
+            cur.complete(i)
+        if cur.finished():
+            return
+        cond = threading.Condition()
+        errs: list[BaseException] = []
+        running: set[int] = set()
+
+        def one(i: int) -> None:
+            try:
+                self._run_op(loc, lp.ops[i], i)
+            except BaseException as e:  # noqa: BLE001
+                with cond:
+                    errs.append(e)
+                    running.discard(i)
+                    cond.notify_all()
+                return
+            with cond:
+                cur.complete(i)
+                running.discard(i)
+                if not errs:
+                    launch_enabled()
+                cond.notify_all()
+
+        def launch_enabled() -> None:
+            # Caller holds ``cond``.
+            for j in cur.enabled_ops():
+                if j not in running:
+                    running.add(j)
+                    threading.Thread(
+                        target=one, args=(j,), daemon=True
+                    ).start()
+
+        deadline = _mono() + self.timeout_s
+        with cond:
+            launch_enabled()
+            while not cur.finished() and not errs:
+                remaining = deadline - _mono()
+                if remaining <= 0 or not cond.wait(remaining):
+                    raise TimeoutError(f"replay stuck on {loc}")
+            if errs:
+                raise errs[0]
+
     def run(self) -> dict[str, dict[str, Any]]:
+        deadline = Deadline(
+            self.policy.deadline_s if self.policy is not None else None
+        )
         threads = [
             threading.Thread(target=self._run_location, args=(loc,), daemon=True)
             for loc in sorted(self.programs)
@@ -325,8 +545,15 @@ class ThreadedProgramRuntime:
         for th in threads:
             th.start()
         for th in threads:
-            th.join(self.timeout_s)
+            rem = deadline.remaining()
+            th.join(
+                self.timeout_s if rem is None else min(self.timeout_s, max(rem, 0.0))
+            )
             if th.is_alive():
+                # The run deadline beats the per-thread diagnosis: abandon
+                # the daemon location threads (pure steps — sound) and
+                # surface the typed overrun.
+                deadline.check()
                 # A peer's failure (e.g. a sender exhausting channel
                 # retries) leaves blocked receivers behind — report the
                 # root cause, not the stuck thread it orphaned.

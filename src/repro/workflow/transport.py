@@ -58,6 +58,7 @@ from .channels import (
 )
 
 __all__ = [
+    "AckTimeout",
     "Transport",
     "InMemoryTransport",
     "SocketTransport",
@@ -75,6 +76,26 @@ _POLL_S = 0.05
 
 #: AF_UNIX socket paths are limited to ~108 bytes; stay well under it.
 _MAX_UNIX_PATH = 90
+
+
+class AckTimeout(ChannelClosed):
+    """A send exhausted its resend budget without ever seeing an ack.
+
+    Distinct from a peer-initiated close (a bare :class:`ChannelClosed`):
+    the peer may still be alive but silent — callers deciding between
+    "peer is gone" and "peer is straggling" branch on this type.  Carries
+    the failing ``endpoint``, the message ``seq`` and how many ``attempts``
+    were made (each attempt = one send + one ack wait).
+    """
+
+    def __init__(self, endpoint: Endpoint, *, seq: int, attempts: int):
+        super().__init__(
+            f"no ack after {attempts} sends on {tuple(endpoint)} "
+            f"(seq {seq})"
+        )
+        self.endpoint = tuple(endpoint)
+        self.seq = seq
+        self.attempts = attempts
 
 
 class Transport(ABC):
@@ -489,9 +510,7 @@ class SocketTransport(Transport):
                         ) from e
                 if self._await_ack(conn, endpoint, seq):
                     return
-            raise ChannelClosed(
-                f"no ack after {self.max_sends} sends on {endpoint}"
-            )
+            raise AckTimeout(endpoint, seq=seq, attempts=self.max_sends)
 
     def _await_ack(self, conn, endpoint: Endpoint, seq: int) -> bool:
         deadline = time.monotonic() + self.ack_timeout

@@ -1,0 +1,673 @@
+"""Uniform fault-policy layer: one ``FaultPolicy``, four backends, one gateway.
+
+The conformance sweep is the headline: the same seeded DAGs with injected
+transient step failures (and a delayed straggler) run on **every registered
+backend** under the same ``policy=FaultPolicy(...)`` lowering option, and
+must produce identical final stores while each backend reports the retries
+it performed.  Around it, targeted regressions for each mechanism:
+
+* capped exponential full-jitter backoff, deterministic under a seeded rng;
+* the single documented heartbeat default (``fault.py`` vs the old 60s
+  construction in ``central.py``);
+* shared interpreter helpers (``call_with_timeout`` / ``StepGuard`` /
+  ``Deadline``);
+* per-backend specifics — inprocess speculation + run deadline, threaded
+  crash-recovery replay, multiprocess worker retry and the heartbeat that
+  declares a *delayed* (not killed) straggler dead and folds it into
+  elastic recovery;
+* the transport's typed :class:`AckTimeout` (endpoint / seq / attempts);
+* serving: ``deadline_s`` → typed 504 within 2× the deadline with the
+  admission slot released, and per-tenant server-side retries.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+import pytest
+from conftest import identity_step_fns
+
+from repro import swirl
+from repro.backends import available_backends
+from repro.core.graph import DistributedWorkflowInstance, make_workflow
+from repro.exec import (
+    Deadline,
+    FaultPolicy,
+    RunDeadlineExceeded,
+    StepGuard,
+    StepTimeoutError,
+)
+from repro.exec.interp import call_with_timeout
+from repro.serve import (
+    Gateway,
+    GatewayClient,
+    GatewayError,
+    TenantConfig,
+    WorkflowService,
+)
+from repro.workflow import (
+    DEFAULT_HEARTBEAT_TIMEOUT_S,
+    AckTimeout,
+    FlakyFn,
+    HeartbeatMonitor,
+    RetryPolicy,
+    SlowFn,
+    SlowOnceAcrossProcesses,
+    TransientError,
+)
+from repro.workflow.transport import SocketTransport, socket_addresses
+
+#: Generous outer timeouts so a loaded CI machine cannot fake a hang.
+BACKEND_OPTIONS = {
+    "threaded": {"timeout_s": 60},
+    "multiprocess": {"timeout_s": 120},
+}
+
+
+def diamond_instance() -> DistributedWorkflowInstance:
+    """The chaos-benchmark diamond: pre → {a, b} → join → out on 3 nodes."""
+    steps = ["c_pre", "c_a", "c_b", "c_join", "c_out"]
+    ports = [f"p{s}" for s in steps]
+    deps = [(s, f"p{s}") for s in steps]
+    deps += [
+        ("pc_pre", "c_a"),
+        ("pc_pre", "c_b"),
+        ("pc_a", "c_join"),
+        ("pc_b", "c_join"),
+        ("pc_join", "c_out"),
+    ]
+    return DistributedWorkflowInstance(
+        workflow=make_workflow(steps, ports, deps),
+        locations=frozenset({"n0", "n1", "n2"}),
+        mapping={
+            "c_pre": ("n0",),
+            "c_a": ("n1",),
+            "c_b": ("n2",),
+            "c_join": ("n1",),
+            "c_out": ("n0",),
+        },
+        data=frozenset({f"d{s}" for s in steps}),
+        placement={f"d{s}": f"p{s}" for s in steps},
+        initial_data={},
+    )
+
+
+def marker_fn(step: str):
+    def fn(inputs):
+        return {f"d{step}": sorted(inputs) + [step]}
+
+    return fn
+
+
+def marker_fns(inst: DistributedWorkflowInstance):
+    return {s: marker_fn(s) for s in inst.workflow.steps}
+
+
+def chain_instance() -> DistributedWorkflowInstance:
+    """A single-location 3-step chain (no blocked peers on failure)."""
+    steps = ["u", "v", "w"]
+    ports = [f"p{s}" for s in steps]
+    deps = [(s, f"p{s}") for s in steps] + [("pu", "v"), ("pv", "w")]
+    return DistributedWorkflowInstance(
+        workflow=make_workflow(steps, ports, deps),
+        locations=frozenset({"l0"}),
+        mapping={s: ("l0",) for s in steps},
+        data=frozenset({f"d{s}" for s in steps}),
+        placement={f"d{s}": f"p{s}" for s in steps},
+        initial_data={},
+    )
+
+
+def policy_counts(result) -> dict:
+    """Normalise each backend's policy stats to one ``{retries, timeouts}``."""
+    stats = result.stats
+    if hasattr(stats, "retries"):  # the inprocess RunStats dataclass
+        return {"retries": stats.retries, "timeouts": stats.timeouts}
+    return dict(stats.get("policy") or {})
+
+
+# ---------------------------------------------------------------------------
+# FaultPolicy construction + the single heartbeat default (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPolicy:
+    def test_zero_policy_is_inert(self):
+        p = FaultPolicy()
+        assert not p.active
+        assert p.retry_policy() is None
+        assert p.speculation_policy() is None
+
+    @pytest.mark.parametrize(
+        "kwargs",
+        [
+            {"max_retries": -1},
+            {"backoff_s": -0.1},
+            {"timeout_s": 0},
+            {"speculation_factor": 0.0},
+            {"deadline_s": -2},
+            {"max_speculative": 0},
+            {"heartbeat_timeout_s": 0},
+        ],
+    )
+    def test_validation(self, kwargs):
+        with pytest.raises(ValueError):
+            FaultPolicy(**kwargs)
+
+    def test_engine_constructors_inherit_fields(self):
+        p = FaultPolicy(
+            max_retries=2,
+            backoff_s=0.5,
+            backoff_cap_s=4.0,
+            speculation_factor=2.5,
+            max_speculative=3,
+            heartbeat_timeout_s=7.0,
+        )
+        rp = p.retry_policy()
+        assert (rp.max_retries, rp.backoff_s, rp.backoff_cap_s) == (2, 0.5, 4.0)
+        sp = p.speculation_policy()
+        assert sp.enabled and sp.factor == 2.5 and sp.max_speculative == 3
+        assert p.heartbeat_monitor().timeout_s == 7.0
+
+    def test_heartbeat_default_single_home(self):
+        # Regression: fault.py used to default 5.0s while central.py
+        # constructed 60.0s — now both read one documented constant.
+        assert (
+            HeartbeatMonitor().timeout_s
+            == FaultPolicy().heartbeat_timeout_s
+            == DEFAULT_HEARTBEAT_TIMEOUT_S
+        )
+
+    def test_policy_crosses_pickle(self):
+        import pickle
+
+        p = FaultPolicy(max_retries=1, timeout_s=2.0)
+        assert pickle.loads(pickle.dumps(p)) == p
+
+
+# ---------------------------------------------------------------------------
+# Exponential full-jitter backoff (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+class TestRetryBackoff:
+    def test_zero_base_never_sleeps(self):
+        assert RetryPolicy(backoff_s=0.0).sleep_s(5) == 0.0
+
+    def test_exponential_ceiling_with_cap(self):
+        rp = RetryPolicy(backoff_s=1.0, backoff_cap_s=4.0, rng=random.Random(1))
+        for attempt, ceiling in [(0, 1.0), (1, 2.0), (2, 4.0), (3, 4.0), (8, 4.0)]:
+            for _ in range(20):
+                s = rp.sleep_s(attempt)
+                assert 0.0 <= s <= ceiling
+
+    def test_deterministic_under_seeded_rng(self):
+        a = RetryPolicy(backoff_s=0.25, rng=random.Random(42))
+        b = RetryPolicy(backoff_s=0.25, rng=random.Random(42))
+        assert [a.sleep_s(n) for n in range(6)] == [
+            b.sleep_s(n) for n in range(6)
+        ]
+
+    def test_jitter_actually_varies(self):
+        rp = RetryPolicy(backoff_s=1.0, rng=random.Random(0))
+        assert len({rp.sleep_s(3) for _ in range(8)}) > 1
+
+
+# ---------------------------------------------------------------------------
+# Shared interpreter helpers
+# ---------------------------------------------------------------------------
+
+
+class TestInterpHelpers:
+    def test_call_with_timeout_passthrough(self):
+        assert call_with_timeout(lambda: 7, None, "s") == 7
+        assert call_with_timeout(lambda: 7, 5.0, "s") == 7
+
+    def test_call_with_timeout_raises_typed(self):
+        with pytest.raises(StepTimeoutError) as ei:
+            call_with_timeout(lambda: time.sleep(5), 0.05, "slow")
+        assert ei.value.step == "slow"
+        assert ei.value.timeout_s == 0.05
+        assert isinstance(ei.value, TransientError)  # consumes a retry
+
+    def test_call_with_timeout_propagates_errors(self):
+        with pytest.raises(KeyError):
+            call_with_timeout(lambda: {}["x"], 5.0, "s")
+
+    def test_step_guard_counts_and_callbacks(self):
+        seen = []
+        guard = StepGuard(
+            FaultPolicy(max_retries=2, timeout_s=0.2),
+            on_retry=lambda step, n, e: seen.append(("retry", step, n)),
+            on_timeout=lambda step: seen.append(("timeout", step)),
+        )
+        flaky = FlakyFn(lambda inputs: {"d": 1}, failures=1)
+        assert guard.fire("s", lambda: flaky({})) == {"d": 1}
+        slow = SlowFn(lambda inputs: {"d": 2}, delay_s=2.0, slow_calls=1)
+        assert guard.fire("t", lambda: slow({})) == {"d": 2}
+        assert guard.counts() == {"retries": 2, "timeouts": 1}
+        assert ("retry", "s", 0) in seen and ("timeout", "t") in seen
+
+    def test_step_guard_lets_budget_exhaustion_escape(self):
+        guard = StepGuard(FaultPolicy(max_retries=1))
+        flaky = FlakyFn(lambda inputs: {"d": 1}, failures=5)
+        with pytest.raises(TransientError):
+            guard.fire("s", lambda: flaky({}))
+
+    def test_deadline(self):
+        d = Deadline(None)
+        assert d.remaining() is None and not d.expired()
+        d.check()  # no-op
+        clock = iter([0.0, 0.05, 0.2, 0.2, 0.2, 0.2]).__next__
+        d = Deadline(0.1, clock=clock)
+        assert d.remaining() == pytest.approx(0.05)
+        assert d.expired()
+        with pytest.raises(RunDeadlineExceeded):
+            d.check()
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend conformance sweep (satellite 4)
+# ---------------------------------------------------------------------------
+
+
+def _sweep_instance(seed: int) -> DistributedWorkflowInstance:
+    from test_differential import random_instance
+
+    return random_instance(random.Random(seed))
+
+
+class TestConformanceSweep:
+    @pytest.mark.parametrize("seed", [11, 23, 37])
+    def test_flaky_steps_agree_across_backends(self, seed):
+        """Same DAG + injected transient failures: identical stores and
+        ≥1 reported retry on every registered backend."""
+        inst = _sweep_instance(seed)
+        plan = swirl.trace(inst).optimize(("R1R2", "R3"))
+        policy = FaultPolicy(max_retries=3)
+        results = {}
+        for backend in available_backends():
+            fns = {
+                s: FlakyFn(fn, failures=1)
+                for s, fn in identity_step_fns(inst).items()
+            }
+            res = (
+                plan.lower(backend, policy=policy, **BACKEND_OPTIONS.get(backend, {}))
+                .compile(fns)
+                .run()
+            )
+            results[backend] = res
+            assert policy_counts(res)["retries"] >= 1, (
+                f"{backend} reported no retries"
+            )
+        reference = available_backends()[0]
+        for backend, res in results.items():
+            assert res.data == results[reference].data, (
+                f"{backend} diverged from {reference} under the fault policy"
+            )
+
+    def test_delayed_straggler_agrees_across_backends(self):
+        """One slow step + per-step timeout: every backend times the
+        straggling attempt out, retries it, and agrees on the store."""
+        inst = diamond_instance()
+        plan = swirl.trace(inst).optimize(("R1R2", "R3"))
+        policy = FaultPolicy(max_retries=2, timeout_s=0.25)
+        results = {}
+        for backend in available_backends():
+            fns = marker_fns(inst)
+            fns["c_join"] = SlowFn(
+                marker_fn("c_join"), delay_s=1.5, slow_calls=1
+            )
+            res = (
+                plan.lower(backend, policy=policy, **BACKEND_OPTIONS.get(backend, {}))
+                .compile(fns)
+                .run()
+            )
+            results[backend] = res
+            counts = policy_counts(res)
+            assert counts["timeouts"] >= 1, f"{backend} reported no timeout"
+            assert counts["retries"] >= 1, f"{backend} reported no retry"
+        reference = available_backends()[0]
+        for backend, res in results.items():
+            assert res.data == results[reference].data
+
+    def test_policy_is_a_known_option_everywhere(self):
+        inst = chain_instance()
+        plan = swirl.trace(inst)
+        for backend in available_backends():
+            lowered = plan.lower(
+                backend,
+                policy=FaultPolicy(max_retries=1),
+                **BACKEND_OPTIONS.get(backend, {}),
+            )
+            res = lowered.compile(marker_fns(inst)).run()
+            assert res.data["l0"]["dw"] == ["dv", "w"]
+
+
+# ---------------------------------------------------------------------------
+# Per-backend specifics
+# ---------------------------------------------------------------------------
+
+
+class TestInprocessPolicy:
+    def test_speculation_win_counted(self):
+        inst = chain_instance()
+        plan = swirl.trace(inst)
+        fns = marker_fns(inst)
+        fns["v"] = SlowFn(marker_fn("v"), delay_s=1.0, slow_calls=1)
+        res = (
+            plan.lower(
+                "inprocess",
+                policy=FaultPolicy(speculation_factor=2.0),
+                expected_s={"v": 0.02},
+            )
+            .compile(fns)
+            .run()
+        )
+        assert res.stats.speculations >= 1
+        assert res.data["l0"]["dw"] == ["dv", "w"]
+
+    def test_run_deadline_raises_typed(self):
+        inst = chain_instance()
+        plan = swirl.trace(inst)
+        fns = marker_fns(inst)
+        fns["v"] = SlowFn(marker_fn("v"), delay_s=5.0, slow_calls=1)
+        lowered = plan.lower(
+            "inprocess", policy=FaultPolicy(deadline_s=0.2)
+        )
+        t0 = time.monotonic()
+        with pytest.raises(RunDeadlineExceeded):
+            lowered.compile(fns).run()
+        assert time.monotonic() - t0 < 4.0
+
+
+class TestThreadedPolicy:
+    def test_crash_recovery_replays_location(self):
+        """A location thread dying mid-program (retry budget exhausted on
+        the first call only) is replayed from its op log."""
+        inst = chain_instance()
+        plan = swirl.trace(inst)
+        fns = marker_fns(inst)
+        # failures=1 with max_retries=0: the first fire kills the location
+        # thread; the replay's fresh fire succeeds.
+        fns["v"] = FlakyFn(marker_fn("v"), failures=1)
+        res = (
+            plan.lower("threaded", timeout_s=30, policy=FaultPolicy())
+            .compile(fns)
+            .run()
+        )
+        recoveries = res.stats.get("recoveries") or []
+        assert any(r["mode"] == "replay" for r in recoveries)
+        assert res.data["l0"]["dw"] == ["dv", "w"]
+
+    def test_deadline_raises_typed(self):
+        inst = chain_instance()
+        plan = swirl.trace(inst)
+        fns = marker_fns(inst)
+        fns["v"] = SlowFn(marker_fn("v"), delay_s=5.0, slow_calls=1)
+        lowered = plan.lower(
+            "threaded", timeout_s=30, policy=FaultPolicy(deadline_s=0.2)
+        )
+        with pytest.raises(RunDeadlineExceeded):
+            lowered.compile(fns).run()
+
+
+class TestMultiprocessPolicy:
+    def test_worker_side_retry(self):
+        inst = diamond_instance()
+        plan = swirl.trace(inst).optimize(("R1R2", "R3"))
+        fns = marker_fns(inst)
+        fns["c_a"] = FlakyFn(marker_fn("c_a"), failures=1)
+        res = (
+            plan.lower(
+                "multiprocess",
+                timeout_s=60,
+                policy=FaultPolicy(max_retries=2),
+            )
+            .compile(fns)
+            .run()
+        )
+        assert res.stats["policy"]["retries"] >= 1
+        assert res.data["n0"]["dc_out"] == ["dc_join", "c_out"]
+
+    @pytest.mark.parametrize("mode", ["spare", "fold"])
+    def test_heartbeat_declares_delayed_straggler(self, mode, tmp_path):
+        """A *delayed* worker (never killed) is declared dead by the
+        progress heartbeat and elastic recovery reruns its work — with the
+        final store identical to a fault-free run modulo the renaming."""
+        inst = diamond_instance()
+        plan = swirl.trace(inst).optimize(("R1R2", "R3"))
+        reference = (
+            plan.lower("multiprocess", timeout_s=60)
+            .compile(marker_fns(inst))
+            .run()
+        )
+        fns = marker_fns(inst)
+        fns["c_join"] = SlowOnceAcrossProcesses(
+            marker_fn("c_join"),
+            flag_path=str(tmp_path / f"straggle-{mode}"),
+            delay_s=30.0,
+        )
+        policy = FaultPolicy(
+            heartbeat_interval_s=0.2, heartbeat_timeout_s=1.0
+        )
+        res = (
+            plan.lower(
+                "multiprocess", timeout_s=60, policy=policy, recover=mode
+            )
+            .compile(fns)
+            .run()
+        )
+        assert res.stats["policy"]["heartbeat_deaths"] == 1
+        (event,) = res.stats["recoveries"]
+        assert event["declared_by"] == "heartbeat"
+        assert event["mode"] == mode
+        # Fault-free data modulo the event's renaming: every (datum,
+        # payload) present in the reference survives at the renamed
+        # location, and no datum changed value anywhere.
+        renaming = event["renaming"]
+        merged: dict[str, dict] = {}
+        for loc, store in reference.data.items():
+            merged.setdefault(renaming.get(loc, loc), {}).update(store)
+        for loc, store in merged.items():
+            for datum, value in store.items():
+                assert res.data[loc][datum] == value, (loc, datum)
+        for loc, store in res.data.items():
+            for datum, value in store.items():
+                assert merged[loc][datum] == value, (loc, datum)
+
+
+class TestJaxPolicy:
+    def test_retry_and_deadline(self):
+        if "jax" not in available_backends():
+            pytest.skip("jax backend not registered")
+        inst = chain_instance()
+        plan = swirl.trace(inst)
+        fns = marker_fns(inst)
+        fns["v"] = FlakyFn(marker_fn("v"), failures=1)
+        res = (
+            plan.lower("jax", policy=FaultPolicy(max_retries=1))
+            .compile(fns)
+            .run()
+        )
+        assert res.stats["policy"]["retries"] == 1
+        fns = marker_fns(inst)
+        fns["v"] = SlowFn(marker_fn("v"), delay_s=5.0, slow_calls=1)
+        lowered = plan.lower("jax", policy=FaultPolicy(deadline_s=0.2))
+        with pytest.raises(RunDeadlineExceeded):
+            lowered.compile(fns).run()
+
+
+# ---------------------------------------------------------------------------
+# Transport: typed AckTimeout (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+class TestAckTimeout:
+    def test_exhausted_resends_raise_typed(self, tmp_path):
+        locations = ["a", "b"]
+        t = SocketTransport(
+            socket_addresses(locations, base_dir=tmp_path),
+            serve=locations,
+            ack_timeout=0.05,
+            max_sends=3,
+            connect_timeout=5.0,
+            drop_prob=1.0,  # the wire eats every frame — no ack, ever
+            seed=1,
+        )
+        try:
+            with pytest.raises(AckTimeout) as ei:
+                t.send(("a", "b", "p"), "d", 1)
+            err = ei.value
+            assert err.endpoint == ("a", "b", "p")
+            assert err.attempts == 3
+            assert err.seq == 1
+            from repro.workflow import ChannelClosed
+
+            assert isinstance(err, ChannelClosed)  # old handlers still match
+            stats = t.stats()
+            assert stats["resends"] == 2  # attempts - 1 re-sends
+            assert stats["delivered"] == 0
+        finally:
+            t.close()
+
+
+# ---------------------------------------------------------------------------
+# Serving: deadline_s → 504, tenant retries (tentpole serving propagation)
+# ---------------------------------------------------------------------------
+
+EDGES = {"prep": ["work"], "work": ["sink"], "sink": []}
+SINGLE_MAPPING = {"prep": ["l1"], "work": ["l1"], "sink": ["l1"]}
+DAG_BODY = {"dag": {"edges": EDGES, "mapping": SINGLE_MAPPING}}
+
+
+def _registry(prep):
+    return {
+        "prep": prep,
+        "work": lambda inp: {"d^work": inp["d^prep"] + [2]},
+        "sink": lambda inp: {},
+    }
+
+
+class TestServingDeadline:
+    def test_deadline_maps_to_typed_504_and_releases_slot(self):
+        def slow_prep(inp):
+            time.sleep(5.0)
+            return {"d^prep": [1]}
+
+        service = WorkflowService(
+            _registry(slow_prep),
+            tenants=[TenantConfig("t", api_key="k", max_concurrent=1)],
+            lower_options={"timeout_s": 30},
+        )
+        with Gateway(service) as gw, GatewayClient(gw.url, api_key="k") as c:
+            fp = c.submit(DAG_BODY)["fingerprint"]
+            t0 = time.monotonic()
+            with pytest.raises(GatewayError) as ei:
+                c.run(fp, deadline_s=0.4)
+            elapsed = time.monotonic() - t0
+            assert ei.value.status == 504
+            assert ei.value.error["type"] == "DeadlineExceeded"
+            assert ei.value.error["deadline_s"] == 0.4
+            assert elapsed < 0.8  # within 2× the deadline
+            # The admission slot is free again: with max_concurrent=1 a
+            # leaked in-flight run would make this queue behind the
+            # abandoned one for its full 5s sleep.
+            depths = service.admission.queue_depths()["t"]
+            assert depths["active"] == 0 and depths["queued"] == 0
+            counters = service.stats()["counters"]
+            assert counters["deadline_aborts"] == 1
+
+    def test_deadline_header_honored(self):
+        def slow_prep(inp):
+            time.sleep(5.0)
+            return {"d^prep": [1]}
+
+        service = WorkflowService(
+            _registry(slow_prep), lower_options={"timeout_s": 30}
+        )
+        with Gateway(service) as gw:
+            import http.client
+            import json as _json
+
+            conn = http.client.HTTPConnection(*gw.address, timeout=30)
+            try:
+                conn.request(
+                    "POST",
+                    f"/v1/workflows/{_submit(gw)}/run",
+                    body=b'{"inputs": {}}',
+                    headers={
+                        "X-API-Key": "",
+                        "Content-Type": "application/json",
+                        "X-Deadline-S": "0.3",
+                    },
+                )
+                resp = conn.getresponse()
+                body = _json.loads(resp.read())
+                assert resp.status == 504
+                assert body["error"]["type"] == "DeadlineExceeded"
+            finally:
+                conn.close()
+
+    def test_fast_run_unaffected_by_deadline(self):
+        service = WorkflowService(
+            _registry(lambda inp: {"d^prep": [1]}),
+            lower_options={"timeout_s": 30},
+        )
+        with Gateway(service) as gw, GatewayClient(gw.url) as c:
+            fp = c.submit(DAG_BODY)["fingerprint"]
+            out = c.run(fp, deadline_s=30.0)
+            assert out["data"]["l1"]["d^work"] == [1, 2]
+            assert service.stats()["counters"]["deadline_aborts"] == 0
+
+    def test_invalid_deadline_is_typed_400(self):
+        service = WorkflowService(
+            _registry(lambda inp: {"d^prep": [1]}),
+            lower_options={"timeout_s": 30},
+        )
+        with Gateway(service) as gw, GatewayClient(gw.url) as c:
+            fp = c.submit(DAG_BODY)["fingerprint"]
+            for bad in (-1, 0, "soon"):
+                with pytest.raises(GatewayError) as ei:
+                    c.run(fp, deadline_s=bad)
+                assert ei.value.status == 400
+                assert ei.value.error["kind"] == "deadline"
+
+
+def _submit(gw) -> str:
+    with GatewayClient(gw.url) as c:
+        return c.submit(DAG_BODY)["fingerprint"]
+
+
+class TestServingTenantRetry:
+    def test_recoverable_failure_retried_per_tenant_policy(self):
+        service = WorkflowService(
+            _registry(FlakyFn(lambda inp: {"d^prep": [1]}, failures=1)),
+            tenants=[TenantConfig("t", api_key="k", max_retries=2)],
+            lower_options={"timeout_s": 10},
+        )
+        with Gateway(service) as gw, GatewayClient(gw.url, api_key="k") as c:
+            fp = c.submit(DAG_BODY)["fingerprint"]
+            out = c.run(fp)
+            assert out["data"]["l1"]["d^work"] == [1, 2]
+            counters = service.stats()["counters"]
+            assert counters["run_retries"] == 1
+            assert counters["instances_completed"] == 1
+
+    def test_zero_retry_tenant_sees_the_failure(self):
+        service = WorkflowService(
+            _registry(FlakyFn(lambda inp: {"d^prep": [1]}, failures=1)),
+            lower_options={"timeout_s": 10},
+        )
+        with Gateway(service) as gw, GatewayClient(gw.url) as c:
+            fp = c.submit(DAG_BODY)["fingerprint"]
+            with pytest.raises(GatewayError) as ei:
+                c.run(fp)
+            assert ei.value.status == 500
+            assert service.stats()["counters"]["run_retries"] == 0
+
+    def test_tenant_config_validates_max_retries(self):
+        with pytest.raises(ValueError, match="max_retries"):
+            TenantConfig("t", api_key="k", max_retries=-1)
