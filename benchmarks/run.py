@@ -10,6 +10,12 @@ Prints ``name,value,unit,derived`` CSV rows.  Sections:
   one chromosome/instance);
 * ``dist``      — 1000 Genomes wall-clock, threaded vs the multiprocess
   backend (real OS processes over the ack-based socket transport);
+* ``dataplane`` — data-plane raw speed (hard-gated): a 3-consumer scatter
+  pump of 64k-float payloads across the seed socket framing vs pickle-5
+  out-of-band vs shared-memory vs hybrid (shm must be ≥5x the seed
+  framing, zero checksum mismatches), plus fused jitted JAX location
+  programs vs the op-by-op interpreter on a 12-step Pallas-rmsnorm
+  pipeline (≥3x, allclose outputs, roofline fraction);
 * ``sched``     — cost-model-driven placement (repro.sched) vs round-robin
   on the 1000 Genomes workflow under the two-rack network preset;
 * ``compile``   — compilation pipeline at scale: encode+R1R2+R3 wall-clock
@@ -43,6 +49,7 @@ machine-trackable across PRs (CI uploads them as workflow artifacts).
 
 from __future__ import annotations
 
+import glob as _glob
 import json
 import platform
 import sys
@@ -189,11 +196,268 @@ def bench_dist() -> None:
             if isinstance(result.stats, dict)
             else 1
         )
-        name = backend + (f"_w{options.get('workers')}" if "workers" in options else "")
+        name = backend
+        if "workers" in options:
+            name += f"_w{options['workers']}"
         row(
             f"dist/genomes_{name}", f"{dt * 1e3:.1f}", "ms",
             f"{label}; locations={n_locs} workers={workers}",
         )
+
+
+def bench_dataplane() -> None:
+    """Data-plane raw speed: zero-copy transports + fused JAX programs.
+
+    Two experiments, both hard-gated (asserts, not just rows):
+
+    * *pump* — a genomes-shaped scatter pump: one source process fans
+      bursts of 64k-float payloads out to 3 consumer processes which
+      checksum and release each message (streaming consumption, so the
+      shm arenas recycle).  Four arms over identical payload streams:
+      the seed-era socket framing (inline pickle, per-message acks), the
+      current pickle-5 out-of-band socket framing, the shared-memory
+      transport, and a hybrid route over shm.  Acceptance: shm ≥ 5x the
+      seed framing per send, zero checksum mismatches across arms.
+    * *fused* — a 12-step single-location pipeline on the JAX backend
+      (Pallas rmsnorm every 4th step, tanh-mix elementwise between),
+      op-by-op interpreter vs ``fuse=True`` (straight-line EXEC runs
+      compiled into one donated-buffer jit per segment).
+      Acceptance: fused ≥ 3x, outputs allclose (float32 jit-fusion
+      reassociation drift is ~1 ULP), roofline fraction reported.
+    """
+    import multiprocessing as mp
+    import tempfile
+
+    from repro.workflow.transport import (
+        HybridTransport,
+        SharedMemoryTransport,
+        SocketTransport,
+        shm_namespace,
+        socket_addresses,
+    )
+
+    class ClassicSocketTransport(SocketTransport):
+        """The seed-era framing: inline pickle, one ack per message."""
+
+        name = "classic"
+
+        def _send_frame(self, conn, frame):
+            conn.send(frame)
+
+        @staticmethod
+        def _recv_frame(conn):
+            return conn.recv()
+
+        def send_many(self, endpoint, items):
+            for data_name, payload in items:
+                self.send(endpoint, data_name, payload)
+
+        def scatter(self, sends):
+            for endpoint, items in sends:
+                self.send_many(endpoint, items)
+
+    NDEST, BURST, WARM, NBURST = 3, 8, 3, 30
+    AUTHKEY = b"bench-dataplane"
+    DESTS = [f"w{i}" for i in range(NDEST)]
+    kw = dict(authkey=AUTHKEY, ack_timeout=5.0, connect_timeout=30.0)
+
+    def make(kind, addrs, serve):
+        if kind == "classic":
+            return ClassicSocketTransport(addrs, serve=serve, **kw)
+        if kind == "socket":
+            return SocketTransport(addrs, serve=serve, **kw)
+        remote = SharedMemoryTransport(addrs, serve=serve, **kw)
+        if kind == "hybrid":
+            return HybridTransport(remote, serve)
+        return remote
+
+    def child(kind, addrs, me, n_msgs, out_q):
+        t = make(kind, addrs, (me,))
+        ep = ("src", me, "p")
+        checksum = 0.0
+        for _ in range(n_msgs):
+            arr = t.recv(ep, timeout=60.0).payload
+            checksum += float(arr[0]) + float(arr[-1])
+            del arr  # consume-and-release: lets the sender recycle arenas
+        out_q.put((me, checksum))
+        t.close()
+
+    ctx = mp.get_context("fork")
+
+    def pump(kind):
+        tmp = tempfile.mkdtemp(prefix=f"swirl-dp-{kind}-")
+        addrs = socket_addresses(["src"] + DESTS, base_dir=tmp)
+        q = ctx.SimpleQueue()
+        n_msgs = (WARM + NBURST) * BURST
+        procs = [
+            ctx.Process(
+                target=child, args=(kind, addrs, d, n_msgs, q), daemon=True
+            )
+            for d in DESTS
+        ]
+        for p in procs:
+            p.start()
+        t = make(kind, addrs, ("src",))
+        rng = np.random.default_rng(0)
+        timed, expect = 0.0, 0.0
+        try:
+            for b in range(WARM + NBURST):
+                arrs = [rng.random(65536) for _ in range(BURST)]
+                sends = [
+                    (
+                        ("src", d, "p"),
+                        [(f"b{b}x{i}", a) for i, a in enumerate(arrs)],
+                    )
+                    for d in DESTS
+                ]
+                t0 = time.perf_counter()
+                t.scatter(sends)
+                if b >= WARM:
+                    timed += time.perf_counter() - t0
+                expect += sum(float(a[0]) + float(a[-1]) for a in arrs)
+            sums = dict(q.get() for _ in DESTS)
+            for p in procs:
+                p.join(30.0)
+            stats = t.stats()
+        finally:
+            t.close()
+        mismatches = sum(
+            1
+            for d in DESTS
+            if abs(sums[d] - expect) > 1e-9 * max(abs(expect), 1.0)
+        )
+        per_send = timed / (NBURST * BURST * NDEST)
+        return per_send, mismatches, stats
+
+    per_send: dict[str, float] = {}
+    mismatch_total = 0
+    for kind in ("classic", "socket", "shm", "hybrid"):
+        best, detail = float("inf"), ""
+        for _ in range(3):
+            dt, mis, stats = pump(kind)
+            mismatch_total += mis
+            if dt < best:
+                best = dt
+                inner = stats.get("remote", stats)
+                if "segments_created" in inner:
+                    detail = (
+                        f"arenas created={inner['segments_created']} "
+                        f"reused={inner['segments_reused']} "
+                        f"dedup={inner['dedup_sends']}"
+                    )
+        per_send[kind] = best
+        row(
+            f"dataplane/pump_{kind}_per_send",
+            f"{best * 1e6:.1f}", "us",
+            detail
+            or f"{NDEST} consumers x {NBURST} bursts x {BURST} x 512KB",
+        )
+    speedup = per_send["classic"] / per_send["shm"]
+    row(
+        "dataplane/pump_shm_speedup", f"{speedup:.2f}", "x",
+        "shm vs seed socket framing — target >= 5x (acceptance)",
+    )
+    row(
+        "dataplane/pump_mismatches", mismatch_total, "checksums",
+        f"{NDEST} consumers x 4 transports x 3 runs (must be 0)",
+    )
+    assert mismatch_total == 0, "transport arms disagreed on payloads"
+    assert speedup >= 5.0, f"shm speedup {speedup:.2f}x < 5x floor"
+    leaked = _glob.glob(f"/dev/shm/{shm_namespace(AUTHKEY)}-*")
+    row("dataplane/pump_shm_leaked", len(leaked), "segments", "(must be 0)")
+    assert not leaked, f"leaked shm segments: {leaked}"
+
+    # -- fused jitted location programs --------------------------------------
+    import jax.numpy as jnp
+
+    from repro import swirl
+    from repro.core.graph import DistributedWorkflowInstance, make_workflow
+    from repro.kernels.ops import rmsnorm
+
+    n_steps, shape = 12, (64, 256)
+    steps = [f"s{i}" for i in range(1, n_steps + 1)]
+    ports = [f"p{i}" for i in range(n_steps + 1)]
+    deps = []
+    for i, s in enumerate(steps):
+        deps += [(f"p{i}", s), (s, f"p{i + 1}")]
+    inst = DistributedWorkflowInstance(
+        workflow=make_workflow(steps, ports, deps),
+        locations=frozenset({"l0"}),
+        mapping={s: ("l0",) for s in steps},
+        data=frozenset(f"d{i}" for i in range(n_steps + 1)),
+        placement={f"d{i}": f"p{i}" for i in range(n_steps + 1)},
+        initial_data={"l0": frozenset({"d0"})},
+    )
+    W = jnp.ones((shape[1],), jnp.float32)
+
+    def norm(v):
+        return rmsnorm(v, W)
+
+    def mix(v):
+        # Contraction (Lipschitz < 1): fused-vs-eager 1-ULP drift cannot
+        # compound down the chain past the allclose gate.
+        return 0.5 * v + 0.1 * jnp.tanh(v)
+
+    fns = {
+        s: (
+            lambda i, a=f"d{k}", b=f"d{k + 1}",
+            f=(norm if k % 4 == 0 else mix): {b: f(i[a])}
+        )
+        for k, s in enumerate(steps)
+    }
+    x = jnp.asarray(
+        np.random.default_rng(7).standard_normal(shape), jnp.float32
+    )
+    init = {("l0", "d0"): x}
+    plan = swirl.trace(inst).optimize()
+    interp = plan.lower("jax").compile(fns)
+    fused = plan.lower("jax", fuse=True).compile(fns)
+    res_i = interp.run(initial_payloads=dict(init))  # warm (traces jits)
+    res_f = fused.run(initial_payloads=dict(init))
+    mism = sum(
+        0
+        if np.allclose(
+            np.asarray(res_i.data[l][d]), np.asarray(res_f.data[l][d]),
+            rtol=1e-5, atol=1e-6,
+        )
+        else 1
+        for l in res_i.data
+        for d in res_i.data[l]
+    )
+    dt_i, _ = _t(
+        lambda: interp.run(initial_payloads=dict(init)), repeat=7
+    )
+    dt_f, res_f = _t(
+        lambda: fused.run(initial_payloads=dict(init)), repeat=7
+    )
+    fstats = res_f.stats["fused"]
+    row(
+        "dataplane/fused_interp", f"{dt_i * 1e3:.2f}", "ms",
+        f"{n_steps}-step pallas-rmsnorm+tanh pipeline {shape}, op-by-op",
+    )
+    row(
+        "dataplane/fused_jit", f"{dt_f * 1e3:.2f}", "ms",
+        f"segments={fstats['fused_calls']} "
+        f"execs_fused={fstats['fused_execs']}/{n_steps}",
+    )
+    fspeed = dt_i / dt_f
+    row(
+        "dataplane/fused_speedup", f"{fspeed:.2f}", "x",
+        "fused jit vs op-by-op interpreter — target >= 3x (acceptance)",
+    )
+    row(
+        "dataplane/fused_mismatches", mism, "arrays",
+        "allclose rtol=1e-5 atol=1e-6 (must be 0)",
+    )
+    rl = fstats["roofline"]["l0"]
+    row(
+        "dataplane/fused_roofline_frac",
+        f"{rl['fraction_of_roof']:.4f}", "",
+        f"achieved {rl['achieved_bytes_per_s'] / 1e9:.2f} GB/s of "
+        f"{rl['theoretical_bytes_per_s'] / 1e9:.0f} GB/s HBM roof",
+    )
+    assert mism == 0, "fused and interpreted runs diverged"
+    assert fspeed >= 3.0, f"fused speedup {fspeed:.2f}x < 3x floor"
 
 
 def bench_sched() -> None:
@@ -963,6 +1227,7 @@ SECTIONS = {
     "optimise": bench_optimise,
     "runtime": bench_runtime,
     "dist": bench_dist,
+    "dataplane": bench_dataplane,
     "sched": bench_sched,
     "compile": bench_compile,
     "serve": bench_serve,

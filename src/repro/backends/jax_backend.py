@@ -48,6 +48,116 @@ def _is_array(x: Any) -> bool:
     return isinstance(x, (jax.Array, np.ndarray))
 
 
+def _plan_segments(program, *, min_len: int = 2) -> dict[int, list]:
+    """Partition the deterministic exec firing order into fusable runs.
+
+    The reducer's firing order depends only on cursor states and data
+    *names*, never on payload values, so it can be replayed statically:
+    simulate the run loop (drain comms, fire the lowest-named enabled
+    exec) without calling any step body and record where straight-line
+    EXEC runs break — at a COMM boundary, or when the leader location
+    changes (a fused program runs on one device).  Returns
+    ``{start_exec_index: [(ExecOp, picks), ...]}`` for every run of at
+    least ``min_len`` ops — the picks are recorded at plan time so the
+    runtime replays cursor completions directly instead of re-scanning
+    enabledness per op; the runtime counts fired execs and swaps in the
+    jitted segment when the counter hits a start index.
+    """
+    cursors = {lp.location: Cursor(lp) for lp in program.programs}
+    data = {lp.location: set(lp.data) for lp in program.programs}
+    order = sorted(cursors)
+    seq: list = []
+    breaks: set[int] = set()
+    while True:
+        comm_fired = False
+        while True:
+            hit = first_enabled_comm(cursors, data, order)
+            if hit is None:
+                break
+            op, src, i, j = hit
+            cursors[src].complete(i)
+            cursors[op.dst].complete(j)
+            data[op.dst].add(op.data)
+            comm_fired = True
+        execs = sorted(
+            enabled_exec_picks(cursors, data, order),
+            key=lambda pair: pair[0].step,
+        )
+        if not execs:
+            break
+        op, picks = execs[0]
+        if (
+            not seq
+            or comm_fired
+            or min(op.locations) != min(seq[-1][0].locations)
+        ):
+            breaks.add(len(seq))
+        seq.append((op, picks))
+        for loc, i in picks:
+            cursors[loc].complete(i)
+            data[loc].update(op.outputs)
+    segments: dict[int, list] = {}
+    starts = sorted(breaks) + [len(seq)]
+    for a, b in zip(starts, starts[1:]):
+        if b - a >= min_len:
+            segments[a] = seq[a:b]
+    return segments
+
+
+class _FusedSegment:
+    """One straight-line EXEC run compiled to a single jitted call.
+
+    The segment function threads a data-name environment through the
+    run's step bodies and returns every datum the run produces, so the
+    per-location stores a fused run leaves behind are identical to the
+    interpreted ones.  The env is split into ``(donated, kept)`` dicts:
+    inputs the segment overwrites and that no other store entry aliases
+    are donated so XLA can reuse their buffers in place (donation is
+    skipped on CPU where the runtime does not support it).
+    """
+
+    def __init__(self, acts: list, steps: Mapping[str, StepMeta]):
+        import jax
+
+        self.acts = acts  # [(ExecOp, picks), ...] in firing order
+        ops = [op for op, _ in acts]
+        self.leader = min(ops[0].locations)
+        produced: set[str] = set()
+        ext: list[str] = []
+        for op in ops:
+            for d in op.inputs:
+                if d not in produced and d not in ext:
+                    ext.append(d)
+            produced.update(op.outputs)
+        self.ext = ext
+        self.produced = produced
+        # Data overwritten by the segment may have its input buffer
+        # donated; everything else must survive the call.
+        self.donatable = [d for d in ext if d in produced]
+        self.out_names: list[str] = []
+        for op in ops:
+            for d in op.outputs:
+                if d not in self.out_names:
+                    self.out_names.append(d)
+        step_fns = {op.step: steps[op.step].fn for op in ops}
+        seg_ops = list(ops)
+        out_names = list(self.out_names)
+
+        def seg_fn(donated: dict, kept: dict) -> dict:
+            env = dict(donated)
+            env.update(kept)
+            for op in seg_ops:
+                out = step_fns[op.step]({d: env[d] for d in op.inputs})
+                for d in op.outputs:
+                    env[d] = out[d]
+            return {d: env[d] for d in out_names}
+
+        self.fn = jax.jit(seg_fn, donate_argnums=(0,))
+        self.calls = 0
+        self.seconds = 0.0  # warm (post-compile) call time only
+        self.bytes = 0
+
+
 class JaxMeshProgram(BackendProgram):
     def _device_map(self) -> dict[str, Any]:
         import jax
@@ -144,6 +254,122 @@ class JaxMeshProgram(BackendProgram):
             stats["comms"] += 1
             return True
 
+        # Fused location programs: straight-line EXEC runs become single
+        # jitted calls (segmented at COMM boundaries).  A fault policy
+        # guard wraps individual step fires, which a fused call cannot
+        # honour, so fusion is skipped when a guard is active.
+        fuse = bool(self.options.get("fuse")) and guard is None
+        if fuse and not hasattr(self, "_segments"):
+            # Plan once per compiled program; jitted segment functions
+            # live across run() calls so repeat runs hit XLA's cache
+            # (and warm-call bandwidth is what roofline reports).
+            self._segments = _plan_segments(self.program)
+            self._seg_cache: dict[int, Any] = {}
+        segments = self._segments if fuse else {}
+        seg_cache = self._seg_cache if fuse else {}
+        if fuse:
+            stats["fused"] = {
+                "segments_planned": len(segments),
+                "fused_calls": 0,
+                "fused_execs": 0,
+                "fallbacks": 0,
+                "locations": {},
+            }
+        exec_count = 0
+
+        def run_segment(start: int) -> bool:
+            """Fire a whole planned segment as one jitted call.
+
+            Returns False (after caching the verdict) when the segment
+            must stay interpreted — non-array inputs, or a step body
+            that does not trace; the caller then falls through to the
+            op-by-op path for every op in the run.
+            """
+            import time as _time
+
+            seg = seg_cache.get(start)
+            if seg == "eager":
+                return False
+            acts = segments[start]
+            if seg is None:
+                seg = _FusedSegment(acts, self.steps)
+                seg_cache[start] = seg
+            env = {d: payloads[(seg.leader, d)] for d in seg.ext}
+            if not all(_is_array(v) for v in env.values()):
+                seg_cache[start] = "eager"
+                stats["fused"]["fallbacks"] += 1
+                return False
+            donated: dict[str, Any] = {}
+            platform = getattr(device_of[seg.leader], "platform", "cpu")
+            if platform != "cpu":
+                for d in seg.donatable:
+                    v = env[d]
+                    if all(
+                        d2 == d and l2 == seg.leader
+                        for (l2, d2), v2 in payloads.items()
+                        if v2 is v
+                    ):
+                        donated[d] = v
+            kept = {d: v for d, v in env.items() if d not in donated}
+            first_call = seg.calls == 0
+            try:
+                import jax
+
+                t0 = _time.perf_counter()
+                out = jax.block_until_ready(seg.fn(donated, kept))
+                dt = _time.perf_counter() - t0
+            except Exception:  # not traceable / unsupported payloads
+                seg_cache[start] = "eager"
+                stats["fused"]["fallbacks"] += 1
+                return False
+            seg.calls += 1
+            moved = sum(
+                int(getattr(v, "nbytes", 0)) for v in env.values()
+            ) + sum(int(getattr(v, "nbytes", 0)) for v in out.values())
+            if not first_call:
+                # First call pays tracing + XLA compile; only warm calls
+                # count toward achieved-bandwidth reporting.
+                seg.seconds += dt
+                seg.bytes += moved
+            loc_stats = stats["fused"]["locations"].setdefault(
+                seg.leader,
+                {"calls": 0, "execs": 0, "bytes": 0, "seconds": 0.0},
+            )
+            loc_stats["calls"] += 1
+            loc_stats["execs"] += len(acts)
+            if not first_call:
+                loc_stats["bytes"] += moved
+                loc_stats["seconds"] += dt
+            stats["fused"]["fused_calls"] += 1
+            stats["fused"]["fused_execs"] += len(acts)
+            # Replay the run's cursor/data effects from the recorded
+            # plan — the values came from the fused call, the
+            # bookkeeping (and the replication of Out^D(s) onto every
+            # D_i) is unchanged.  Outputs already live on the leader's
+            # device, so placement only pays for genuinely remote
+            # locations.
+            leader_dev = device_of[seg.leader]
+            for op, picks in acts:
+                if recorder is not None:
+                    record_exec_fire(recorder, op, t0, t0 + dt)
+                missing = set(op.outputs) - set(out)
+                if missing:
+                    raise RuntimeError(
+                        f"step {op.step!r} did not produce "
+                        f"{sorted(missing)}"
+                    )
+                for loc, i in picks:
+                    cursors[loc].complete(i)
+                    data[loc].update(op.outputs)
+                    for d in op.outputs:
+                        payloads[(loc, d)] = (
+                            out[d]
+                            if device_of[loc] is leader_dev
+                            else place(loc, out[d])
+                        )
+                stats["execs"] += 1
+            return True
+
         max_rounds = int(self.options.get("max_rounds", 1_000_000))
         for _ in range(max_rounds):
             deadline.check()
@@ -151,6 +377,11 @@ class JaxMeshProgram(BackendProgram):
             # Drain communications first (they are τ — silent, confluent).
             while fire_one_comm():
                 progressed = True
+            if fuse and exec_count in segments:
+                if run_segment(exec_count):
+                    exec_count += len(segments[exec_count])
+                    progressed = True
+                    continue
             # Deterministic firing order: lowest step name first.
             execs = sorted(
                 enabled_exec_picks(cursors, data, order),
@@ -183,10 +414,25 @@ class JaxMeshProgram(BackendProgram):
                     for d in op.outputs:
                         payloads[(loc, d)] = place(loc, out[d])
                 stats["execs"] += 1
+                exec_count += 1
                 progressed = True
             if not progressed:
                 break
 
+        if fuse:
+            from repro.roofline import HBM_BW
+
+            roofline = {}
+            for loc, ls in stats["fused"]["locations"].items():
+                achieved = (
+                    ls["bytes"] / ls["seconds"] if ls["seconds"] > 0 else 0.0
+                )
+                roofline[loc] = {
+                    "achieved_bytes_per_s": achieved,
+                    "theoretical_bytes_per_s": HBM_BW,
+                    "fraction_of_roof": achieved / HBM_BW,
+                }
+            stats["fused"]["roofline"] = roofline
         if guard is not None:
             stats["policy"] = guard.counts()
         if not all(c.finished() for c in cursors.values()):
@@ -219,7 +465,7 @@ class JaxBackend(Backend):
 
     def known_options(self) -> frozenset[str]:
         return super().known_options() | frozenset(
-            {"devices", "platform", "max_rounds"}
+            {"devices", "platform", "max_rounds", "fuse"}
         )
 
     def compile(

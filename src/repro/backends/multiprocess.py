@@ -432,7 +432,15 @@ class MultiprocessProgram(BackendProgram):
         opts = dict(self.options)
         schedule = opts.pop("schedule", None)
         workers = opts.pop("workers", None)
-        transport_name = opts.pop("transport", "socket")
+        zero_copy = bool(opts.pop("zero_copy", False))
+        transport_name = opts.pop("transport", None)
+        if transport_name is None:
+            transport_name = "shm" if zero_copy else "socket"
+        elif zero_copy and transport_name != "shm":
+            raise ValueError(
+                f"zero_copy=True requires the shared-memory transport; "
+                f"got transport={transport_name!r}"
+            )
         start_method = opts.pop("start_method", None)
         timeout_s = float(opts.pop("timeout_s", DEFAULT_TIMEOUT_S))
         ack_timeout = float(opts.pop("ack_timeout", 1.0))
@@ -682,7 +690,7 @@ class MultiprocessProgram(BackendProgram):
         """
         from multiprocessing import connection as mpc
 
-        from repro.workflow.transport import socket_addresses
+        from repro.workflow.transport import get_transport, socket_addresses
 
         tmpdir = tempfile.mkdtemp(prefix="swirl-mp-")
         addresses = socket_addresses(program.locations(), base_dir=tmpdir)
@@ -922,6 +930,13 @@ class MultiprocessProgram(BackendProgram):
                 except OSError:
                     pass
             shutil.rmtree(tmpdir, ignore_errors=True)
+            # A worker killed mid-send cannot reclaim its shared-memory
+            # segments; the coordinator sweeps the attempt's namespace
+            # (derived from this attempt's authkey) so a crashed fleet
+            # never leaks /dev/shm entries.
+            sweep = getattr(get_transport(transport_name), "sweep", None)
+            if sweep is not None:
+                sweep(authkey)
         return failure, finals, pids
 
     # -- checkpoint capability ----------------------------------------------
@@ -951,6 +966,7 @@ class MultiprocessBackend(Backend):
             {
                 "workers",
                 "transport",
+                "zero_copy",
                 "start_method",
                 "timeout_s",
                 "ack_timeout",

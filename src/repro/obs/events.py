@@ -48,13 +48,25 @@ KINDS = ("exec", "send", "recv", "phase")
 
 
 def payload_nbytes(value: Any) -> int:
-    """Best-effort payload size — mirrors ``SizeModel.from_payloads``."""
+    """Best-effort payload size — mirrors ``SizeModel.from_payloads``.
+
+    Sizing runs on the send/recv hot path, so it must never serialize
+    the payload: arrays answer via ``nbytes``, buffer-protocol objects
+    (bytes, bytearray, mmap, pickle-5 out-of-band buffers) via a
+    zero-copy ``memoryview``, and only opaque Python objects fall back
+    to ``sys.getsizeof`` — all O(1) in the payload size.
+    """
     nbytes = getattr(value, "nbytes", None)
     if nbytes is not None:
         try:
             return int(nbytes)
         except (TypeError, ValueError):
             pass
+    try:
+        with memoryview(value) as mv:
+            return mv.nbytes
+    except TypeError:
+        pass
     return sys.getsizeof(value)
 
 

@@ -376,11 +376,18 @@ class ThreadedProgramRuntime:
                 nid, frozenset()
             )
             rest = []
+            batch: list[tuple] = []
             for c in spec.children[nid]:
                 if c in safe:
-                    self._run_node(loc, spec, c)
+                    acts = self._collect_send_acts(loc, spec, c)
+                    if acts is None:
+                        self._run_node(loc, spec, c)
+                    else:
+                        batch.extend(acts)
                 else:
                     rest.append(c)
+            if batch:
+                self._fire_send_batch(loc, batch)
             if not rest:
                 return
             futures = [
@@ -431,6 +438,63 @@ class ThreadedProgramRuntime:
                 raise TimeoutError(f"parallel branch stuck on {loc}")
         if errs:
             raise _first_real(errs)
+
+    def _collect_send_acts(
+        self, loc: str, spec, nid: int
+    ) -> "list[tuple] | None":
+        """Flatten a send-only inline branch into its (op, index) acts.
+
+        Returns ``None`` when the subtree holds anything but sequential
+        SendOps — the caller falls back to per-op interpretation.
+        """
+        kind = spec.kind[nid]
+        if kind == K_ACT:
+            i = spec.instr[nid]
+            op = self.programs[loc].ops[i]
+            if isinstance(op, SendOp):
+                return [(op, i)]
+            return None
+        if kind == K_SEQ:
+            acts: list[tuple] = []
+            for child in spec.children[nid]:
+                sub = self._collect_send_acts(loc, spec, child)
+                if sub is None:
+                    return None
+                acts.extend(sub)
+            return acts
+        return None
+
+    def _fire_send_batch(self, loc: str, acts: "list[tuple]") -> None:
+        """Fire a rank's worth of sends as one fan-out exchange.
+
+        Grouping consecutive ready sends by destination lets the
+        transport amortise framing and the ack round trip over the whole
+        burst (``scatter``/``send_many``) instead of paying them per
+        message — on the zero-copy path a broadcast payload is also
+        written to shared memory once, not once per destination.  Batch
+        order preserves per-endpoint program order, so the FIFO delivery
+        contract is unchanged; op indices are only logged after the
+        whole exchange is acknowledged, so a crash replays the entire
+        batch (exactly the all-or-nothing semantics crash replay already
+        assumes for an unlogged op).
+        """
+        payloads = [
+            self._wait_data(loc, (op.data,))[op.data] for op, _ in acts
+        ]
+        groups: dict[tuple, list] = {}
+        for (op, _), payload in zip(acts, payloads):
+            groups.setdefault(self._endpoint(op), []).append(
+                (op.data, payload)
+            )
+        rec = self.recorder
+        t0 = _mono() if rec is not None else 0.0
+        self.transport.scatter(list(groups.items()))
+        t1 = _mono() if rec is not None else 0.0
+        for (op, i), payload in zip(acts, payloads):
+            if rec is not None:
+                record_send_fire(rec, op, t0, t1, payload)
+            if self._op_log is not None:
+                self._op_log[loc].append(i)
 
     def _run_branch(self, loc: str, spec, nid: int) -> None:
         """One Par branch; a failure poisons the location's data waits."""

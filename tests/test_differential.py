@@ -42,6 +42,16 @@ BACKEND_OPTIONS = {
     "multiprocess": {"timeout_s": 120},
 }
 
+#: Data-plane arms layered on top of every registered backend's default
+#: configuration: the multiprocess backend over the zero-copy
+#: shared-memory transport, and the JAX backend with fused location
+#: programs.  Both must produce byte-identical stores to the defaults on
+#: every sampled DAG — the fast path is not allowed to change results.
+EXTRA_ARMS = [
+    ("multiprocess[shm]", "multiprocess", {"zero_copy": True}),
+    ("jax[fused]", "jax", {"fuse": True}),
+]
+
 CHUNKS = 20
 CHUNK_SIZE = 5  # CHUNKS × CHUNK_SIZE = 100 DAGs ≥ the acceptance floor
 
@@ -101,12 +111,17 @@ def random_instance(rng: random.Random) -> DistributedWorkflowInstance:
     )
 
 
-def _run(plan, inst, backend):
-    lowered = plan.lower(backend, **BACKEND_OPTIONS.get(backend, {}))
+def _run(plan, inst, backend, extra_options=None):
+    options = dict(BACKEND_OPTIONS.get(backend, {}))
+    if extra_options:
+        options.update(extra_options)
+    lowered = plan.lower(backend, **options)
     return lowered.compile(identity_step_fns(inst)).run().data
 
 
-def _assert_backends_agree(inst, *, check_raw: bool) -> None:
+def _assert_backends_agree(
+    inst, *, check_raw: bool, extra_arms: bool = True
+) -> None:
     raw = swirl.trace(inst)
     opt = raw.optimize(("R1R2", "R3"))
     backends = available_backends()
@@ -117,6 +132,15 @@ def _assert_backends_agree(inst, *, check_raw: bool) -> None:
         assert got == reference, (
             f"{b} diverged from {reference_backend} on the optimized plan"
         )
+    if extra_arms:
+        for label, backend, options in EXTRA_ARMS:
+            if backend not in backends:
+                continue
+            got = _run(opt, inst, backend, options)
+            assert got == reference, (
+                f"{label} diverged from {reference_backend} on the "
+                "optimized plan"
+            )
     if check_raw:
         for b in backends:
             assert _run(raw, inst, b) == reference, (

@@ -10,10 +10,12 @@ re-executing completed steps.
 
 from __future__ import annotations
 
+import glob
 import multiprocessing as mp
 import os
 import signal
 
+import numpy as np
 import pytest
 
 from repro import swirl
@@ -469,3 +471,85 @@ class TestElasticRecovery:
                 expected.setdefault(ren.get(l, l), {}).update(d)
             assert r.data == expected
         _assert_no_workers_left(exe.program)
+
+
+# ---------------------------------------------------------------------------
+# Elastic recovery over the zero-copy shared-memory transport
+# ---------------------------------------------------------------------------
+
+
+class TestZeroCopyElasticRecovery:
+    """SIGKILL a worker that owns live /dev/shm arenas, then recover.
+
+    ``preprocess`` on cpu0 broadcasts a 512KB array out of cpu0's shm
+    arenas; ``report`` also runs on cpu0, so killing at ``report`` takes
+    down a worker whose shared-memory segments are still on disk.  The
+    recovery respawn must produce the clean run's arrays (modulo the
+    renaming) and the coordinator's namespace sweep must leave nothing
+    behind in /dev/shm.
+    """
+
+    @staticmethod
+    def _array_steps():
+        return {
+            "preprocess": lambda inp: {
+                "d^preprocess": np.arange(65536, dtype=np.float64)
+            },
+            "train_a": lambda inp: {"d^train_a": inp["d^preprocess"] * 2.0},
+            "train_b": lambda inp: {"d^train_b": inp["d^preprocess"] + 1.0},
+            "evaluate": lambda inp: {
+                "d^evaluate": inp["d^train_a"] + inp["d^train_b"]
+            },
+            "report": lambda inp: {},
+        }
+
+    @staticmethod
+    def _data_equal(got, want):
+        if got.keys() != want.keys():
+            return False
+        for loc, payloads in want.items():
+            if got[loc].keys() != payloads.keys():
+                return False
+            for d, v in payloads.items():
+                if not np.array_equal(
+                    np.asarray(got[loc][d]), np.asarray(v)
+                ):
+                    return False
+        return True
+
+    @pytest.mark.parametrize(
+        "mode,opts",
+        [
+            ("spare", {"recover": "spare", "spares": ["spare0"]}),
+            ("fold", {"recover": "fold"}),
+        ],
+    )
+    def test_recovery_with_live_segments_leaves_no_shm(
+        self, plan, mode, opts
+    ):
+        before = set(glob.glob("/dev/shm/swirl-*"))
+        clean = (
+            plan.lower("multiprocess", timeout_s=60, zero_copy=True)
+            .compile(self._array_steps())
+            .run()
+        )
+        exe = plan.lower(
+            "multiprocess",
+            timeout_s=120,
+            zero_copy=True,
+            _kill_at_step="report",
+            **opts,
+        ).compile(self._array_steps())
+        result = exe.run()
+
+        recs = result.stats["recoveries"]
+        assert len(recs) == 1
+        assert recs[0]["mode"] == mode
+        ren = recs[0]["renaming"]
+        assert set(ren) == {"cpu0"}
+        expected: dict = {}
+        for l, d in clean.data.items():
+            expected.setdefault(ren.get(l, l), {}).update(d)
+        assert self._data_equal(result.data, expected)
+        _assert_no_workers_left(exe.program)
+        assert set(glob.glob("/dev/shm/swirl-*")) == before

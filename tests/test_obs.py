@@ -132,6 +132,53 @@ class TestTraceRecorder:
         assert len(rec) == 0
 
 
+class TestPayloadSizing:
+    """``payload_nbytes`` must size without serializing the payload."""
+
+    def test_array_and_buffer_sizes_are_exact(self):
+        from repro.obs.events import payload_nbytes
+
+        assert payload_nbytes(np.zeros(65536)) == 65536 * 8
+        assert payload_nbytes(b"x" * 4096) == 4096
+        assert payload_nbytes(bytearray(8192)) == 8192
+        assert payload_nbytes(memoryview(bytearray(1024))) == 1024
+        # Opaque objects still get the getsizeof fallback.
+        assert payload_nbytes({"a": 1}) == sys.getsizeof({"a": 1})
+
+    def test_sizing_large_array_allocates_nothing(self):
+        """Like the disabled-recorder path: O(1) blocks, no copy."""
+        from repro.obs.events import payload_nbytes
+
+        arr = np.zeros(1 << 20)  # 8 MB — a copy or pickle would show
+        payload_nbytes(arr)  # warm any lazy state
+        gc.disable()
+        try:
+            gc.collect()
+            before = sys.getallocatedblocks()
+            for _ in range(1_000):
+                payload_nbytes(arr)
+            after = sys.getallocatedblocks()
+        finally:
+            gc.enable()
+        assert after - before <= 16
+
+    def test_sizing_buffer_payload_is_zero_copy(self):
+        """memoryview sizing must not materialise the buffer's bytes."""
+        import tracemalloc
+
+        from repro.obs.events import payload_nbytes
+
+        buf = bytearray(4 << 20)  # no .nbytes attribute — memoryview path
+        payload_nbytes(buf)
+        tracemalloc.start()
+        try:
+            payload_nbytes(buf)
+            _, peak = tracemalloc.get_traced_memory()
+        finally:
+            tracemalloc.stop()
+        assert peak < 64 * 1024  # a copy would show up as ≥4 MB
+
+
 # ---------------------------------------------------------------------------
 # Identical span schemas across every backend
 # ---------------------------------------------------------------------------
